@@ -1,0 +1,63 @@
+"""Fig 14 (adaptive scaling) + Fig 18 (failover).
+
+Flow Monitor at 10 Gbps, retargeted to 20/40/back-to-10; we report the
+controller's decision+rewire response time (the paper measures ~400 ms
+end-to-end including container start; our executor spawn is jit-cached, so
+the controller path is the comparable part). Failover: fail a NIC hosting
+stages, measure re-placement time + post-recovery capacity (paper: <500 ms)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import (APP_STAGE_LATENCY_US, APP_STAGE_RESOURCE,
+                               PKT_BITS, row)
+from repro.apps import ALL_APPS
+from repro.core.controller import MeiliController
+from repro.core.pool import paper_cluster
+from repro.core.profiler import synthetic_profile
+
+BITS = PKT_BITS * 256
+
+
+def run(emit=print) -> dict:
+    out = {}
+    ctrl = MeiliController(paper_cluster())
+    fm = ALL_APPS(impl="ref")["FM"]
+    lat = {s: l * 1e-6 * 256 for s, l in APP_STAGE_LATENCY_US["FM"].items()}
+    prof = synthetic_profile(fm.stage_names(), lat, BITS)
+    dep = ctrl.submit(fm, target_gbps=10.0, profile=prof)
+    emit(row("fig14_deploy_10Gbps", 0, f"achievable={dep.achievable_gbps:.1f}"))
+    for tgt in (20.0, 40.0, 10.0):
+        t0 = time.perf_counter()
+        dep = ctrl.adaptive_scale(fm.name, tgt)
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        ok = dep.achievable_gbps >= tgt
+        out[tgt] = (dt_ms, dep.achievable_gbps)
+        emit(row(f"fig14_scale_to_{tgt:.0f}Gbps", dt_ms * 1e3,
+                 f"response={dt_ms:.2f}ms_met={ok}_paper~400ms"))
+
+    # Fig 18: failover of FM + ISG
+    isg = ALL_APPS(impl="ref")["ISG"]
+    lat_isg = {s: l * 1e-6 * 256
+               for s, l in APP_STAGE_LATENCY_US["ISG"].items()}
+    prof_isg = synthetic_profile(isg.stage_names(), lat_isg, BITS)
+    dep_isg = ctrl.submit(isg, target_gbps=5.0, profile=prof_isg)
+    ctrl.replicate_for_failover(isg.name)
+    victim = dep_isg.allocation.nics_for("aes")[0]
+    t0 = time.perf_counter()
+    impacted = ctrl.handle_failure(victim)
+    dt_ms = (time.perf_counter() - t0) * 1e3
+    dep_isg = ctrl.deployments[isg.name]
+    emit(row("fig18_failover", dt_ms * 1e3,
+             f"recovered={dep_isg.achievable_gbps:.1f}Gbps_"
+             f"response={dt_ms:.2f}ms_paper<500ms_impacted={impacted}"))
+    out["failover_ms"] = dt_ms
+    return out
+
+
+def main() -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

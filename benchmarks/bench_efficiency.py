@@ -1,0 +1,169 @@
+"""Fig 11(a/b): cluster resource efficiency — Meili vs Baseline-dedicate vs
+Baseline-colocate.
+
+Protocol (paper §8.2): set one uniform throughput target for every app,
+check whether the system can satisfy ALL of them simultaneously (FCFS);
+lower the target until it fits; report the max achievable per-app target.
+
+  * Baseline-dedicate: whole-app instances, each instance owns a full NIC.
+  * Baseline-colocate: whole-app instances, instances may share NICs.
+  * Meili: stage-granular allocation over the pool (Algorithm 2).
+
+Instance placement for the baselines respects the paper's Table 3
+constraints (ID needs regex -> BF-2 only; ICG needs compression -> BF-2 or
+Pensando; FW/FM/LLB CPU-only -> any NIC).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List
+
+from benchmarks.common import (APP_STAGE_LATENCY_US, APP_STAGE_RESOURCE,
+                               row, unit_gbps)
+from repro.core.allocation import commit, resource_alloc
+from repro.core.pool import CPU, NicSpec, Pool, paper_cluster
+
+APPS5 = ["ID", "ICG", "FW", "FM", "LLB"]
+
+
+def make_cluster(pensando: bool) -> Pool:
+    return paper_cluster(n_bf2=8, n_bf1=4, n_pensando=4 if pensando else 0)
+
+
+def stage_unit_gbps(app: str) -> Dict[str, float]:
+    return {s: unit_gbps(l) for s, l in APP_STAGE_LATENCY_US[app].items()}
+
+
+def nic_supports(nic: NicSpec, app: str) -> bool:
+    needs = set(APP_STAGE_RESOURCE[app].values())
+    return all(nic.capacity(r) > 0 for r in needs)
+
+
+def instance_throughput(nic: NicSpec, app: str, cores: int) -> float:
+    """Best whole-app instance rate on one NIC given `cores` CPU cores:
+    greedy water-filling of cores to the bottleneck CPU stage; accelerator
+    stages are capped by the NIC's engine count."""
+    t_s = stage_unit_gbps(app)
+    res = APP_STAGE_RESOURCE[app]
+    alloc = {s: (0 if res[s] == CPU else nic.capacity(res[s]))
+             for s in t_s}
+    cpu_stages = [s for s in t_s if res[s] == CPU]
+    if not all(alloc[s] > 0 for s in t_s if res[s] != CPU):
+        return 0.0
+    for _ in range(cores):
+        # give the next core to the current CPU bottleneck
+        s = min(cpu_stages, key=lambda s: alloc[s] * t_s[s])
+        alloc[s] += 1
+    rate = min(alloc[s] * t_s[s] for s in t_s)
+    return rate
+
+
+def baseline_feasible(pool_nics: List[NicSpec], target: float,
+                      colocate: bool) -> bool:
+    """Greedy FCFS placement of whole-app instances until every app reaches
+    `target` (the paper's per-instance scaling)."""
+    cores_free = {n.name: n.cores for n in pool_nics}
+    accel_free = {n.name: dict(n.accelerators) for n in pool_nics}
+    owner = {n.name: None for n in pool_nics}
+
+    for app in APPS5:
+        need = target
+        res = APP_STAGE_RESOURCE[app]
+        t_s = stage_unit_gbps(app)
+        for nic in pool_nics:
+            if need <= 1e-9:
+                break
+            if not nic_supports(nic, app):
+                continue
+            if not colocate and owner[nic.name] is not None:
+                continue
+            if colocate:
+                # use remaining cores/accels on this NIC
+                cores = cores_free[nic.name]
+                if cores <= 0:
+                    continue
+                # accel stages need free engines
+                if any(res[s] != CPU and accel_free[nic.name].get(res[s], 0)
+                       <= 0 for s in t_s):
+                    continue
+            else:
+                cores = nic.cores
+            spec = NicSpec(nic.name, nic.kind, cores,
+                           accel_free[nic.name] if colocate
+                           else dict(nic.accelerators), nic.bandwidth_gbps)
+            rate = instance_throughput(spec, app, cores)
+            if rate <= 0:
+                continue
+            got = min(rate, need)
+            # cores consumed proportional to the fraction of capacity used
+            used_cores = cores if not colocate else max(
+                1, int(round(cores * got / max(rate, 1e-9))))
+            cores_free[nic.name] -= used_cores
+            if colocate:
+                for s in t_s:
+                    if res[s] != CPU:
+                        accel_free[nic.name][res[s]] -= 1
+            owner[nic.name] = app
+            need -= got
+        if need > 1e-6:
+            return False
+    return True
+
+
+def meili_feasible(pensando: bool, target: float, with_isg: float = 0.0
+                   ) -> bool:
+    pool = make_cluster(pensando)
+    # reserve one TO core per NIC is already in paper_cluster specs
+    apps = APPS5 + (["ISG"] if with_isg > 0 else [])
+    for app in apps:
+        tgt = with_isg if app == "ISG" else target
+        t_s = stage_unit_gbps(app)
+        need = APP_STAGE_RESOURCE[app]
+        r_s = {s: max(1, int(-(-tgt // t_s[s]))) for s in t_s}
+        alloc = resource_alloc(list(t_s), r_s, t_s, pool, need)
+        if not alloc.satisfied():
+            return False
+        commit(pool, alloc, need)
+    return True
+
+
+def max_target(feasible, lo=0.0, hi=110.0, step=0.1) -> float:
+    t = hi
+    while t > lo:
+        if feasible(t):
+            return t
+        t = round(t - step, 3)
+    return 0.0
+
+
+def run(emit=print) -> dict:
+    out = {}
+    for pensando, label in ((False, "cluster1"), (True, "cluster2")):
+        nics = [st.spec for st in make_cluster(pensando).nics.values()]
+        ded = max_target(lambda t: baseline_feasible(nics, t, colocate=False),
+                         step=0.5)
+        col = max_target(lambda t: baseline_feasible(nics, t, colocate=True),
+                         step=0.5)
+        mei = max_target(lambda t: meili_feasible(pensando, t), step=0.5)
+        out[label] = (ded, col, mei)
+        emit(row(f"fig11a_{label}_dedicate", 0, f"{ded:.1f}Gbps"))
+        emit(row(f"fig11a_{label}_colocate", 0, f"{col:.1f}Gbps"))
+        emit(row(f"fig11a_{label}_meili", 0, f"{mei:.1f}Gbps"))
+        emit(row(f"fig11a_{label}_gain_vs_dedicate", 0,
+                 f"{mei / max(ded, 1e-9):.2f}x_paper1.82x"))
+        emit(row(f"fig11a_{label}_gain_vs_colocate", 0,
+                 f"{mei / max(col, 1e-9):.2f}x_paper1.46x"))
+    # Fig 11(b): ISG coexists in cluster 2 (infeasible for both baselines).
+    for isg_t in (5.0, 10.0, 20.0):
+        ok = meili_feasible(True, out["cluster2"][2] - 6.0, with_isg=isg_t)
+        emit(row(f"fig11b_isg_{isg_t:.0f}Gbps", 0,
+                 f"feasible={ok}_baselines=infeasible"))
+    return out
+
+
+def main() -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

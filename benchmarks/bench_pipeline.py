@@ -1,0 +1,45 @@
+"""Fig 7/8: partial pipeline replication vs full replication (Algorithm 1's
+efficiency claim), on the discrete-event simulator for the three §5.1.1
+pipeline patterns."""
+from __future__ import annotations
+
+from benchmarks.common import row
+from repro.core import replication as repl
+from repro.core import sim
+
+PATTERNS = {
+    "listing1": {"S1": 2.0, "S2": 1.7, "S3": 2.9, "S4": 1.0},   # Fig 7
+    "pattern_I": {"S1": 1.0, "S2": 2.0, "S3": 3.0, "S4": 4.0},
+    "pattern_II": {"S1": 3.0, "S2": 1.0, "S3": 2.5, "S4": 1.2},
+    "pattern_III": {"S1": 4.0, "S2": 2.0, "S3": 1.5, "S4": 1.0},
+}
+
+
+def run(emit=print) -> dict:
+    out = {}
+    for name, lat in PATTERNS.items():
+        stages = list(lat)
+        R = repl.num_replication(stages, lat)
+        n = repl.num_pipelines(R)
+        full = repl.full_replication(stages, n)
+        r_part = sim.simulate(stages, lat, R, 200)
+        r_full = sim.simulate(stages, lat, full, 200)
+        eff_p = r_part.utilization(lat)
+        eff_f = r_full.utilization(lat)
+        out[name] = (eff_p, eff_f, r_part.throughput, r_full.throughput)
+        emit(row(f"fig7_{name}_partial", r_part.avg_latency,
+                 f"R={list(R.values())}_thr={r_part.throughput:.3f}"
+                 f"_util={eff_p:.3f}"))
+        emit(row(f"fig7_{name}_full", r_full.avg_latency,
+                 f"x{n}_thr={r_full.throughput:.3f}_util={eff_f:.3f}"))
+        emit(row(f"fig7_{name}_verdict", 0,
+                 f"partial_util_gain={eff_p / max(eff_f, 1e-9):.2f}x"))
+    return out
+
+
+def main() -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Fig 15/16/17: Traffic Orchestrator microbenchmarks (measured here).
+
+Fig 15: single-TO redirection throughput vs packet size (our TO partitions
+batches with host-side flow lookups + device gathers; we report Gbps from
+measured wall time). Fig 16: per-packet redirection latency vs packet size.
+Fig 17: end-to-end partition+aggregate latency, same-NIC vs distributed
+(hop-penalty model from §8.5)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import HOP_US, row, timeit
+from repro.apps.packets import synth_packets
+from repro.core.orchestrator import TrafficOrchestrator
+
+
+def run(emit=print) -> dict:
+    out = {}
+    B = 512
+    for pkt_bytes in (64, 128, 256, 512, 1500):
+        pkts = synth_packets(batch=B, num_flows=32, pkt_bytes=pkt_bytes)
+        to = TrafficOrchestrator(num_pipelines=4, capacity_per_pipeline=B)
+
+        def rt():
+            subs = to.partition(pkts)
+            return to.aggregate(subs, total=B)
+
+        us = timeit(rt, iters=5) * 1e6
+        gbps = (B * pkt_bytes * 8) / (us * 1e-6) / 1e9
+        per_pkt_us = us / B
+        out[pkt_bytes] = (gbps, per_pkt_us)
+        emit(row(f"fig15_redirect_{pkt_bytes}B", us, f"{gbps:.2f}Gbps"))
+        emit(row(f"fig16_perpkt_{pkt_bytes}B", per_pkt_us,
+                 "sub-us-goal" if per_pkt_us < 1.0 else "above-1us(CPU-host)"))
+    # Fig 17: partition+aggregate E2E, 1..8 pipelines, same vs distributed
+    pkts = synth_packets(batch=B, num_flows=1, pkt_bytes=1500)
+    for n in (1, 2, 4, 8):
+        to = TrafficOrchestrator(num_pipelines=n,
+                                 capacity_per_pipeline=B // n + 1)
+        us = timeit(lambda: to.aggregate(to.partition(pkts), total=B),
+                    iters=5) * 1e6
+        emit(row(f"fig17_same_nic_p{n}", us, f"{us:.0f}us"))
+        emit(row(f"fig17_distributed_p{n}", us + HOP_US,
+                 f"+{HOP_US}us_hop"))
+        out[f"pipes{n}"] = us
+    return out
+
+
+def main() -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

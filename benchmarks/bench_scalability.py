@@ -1,0 +1,55 @@
+"""Fig 9 + Fig 10: single-flow throughput/latency vs number of pipelines.
+
+Meili partitions one flow across replicated pipelines (§5.1.2); Baseline
+processes a flow on one NIC only. Meili-local replicates on one NIC (<=7
+pipelines: one core is the TO); Meili-remote adds one NIC per pipeline with
+the §8.5 hop/TO penalty (~5-10% throughput, +5-8 µs latency).
+"""
+from __future__ import annotations
+
+from benchmarks.common import (APP_STAGE_LATENCY_US, HOP_US, PKT_BITS, row,
+                               unit_gbps)
+from repro.core import sim
+
+PARTITION_OVERHEAD = 0.04      # paper: Meili@1 pipeline slightly < Baseline
+REMOTE_PENALTY = 0.075         # paper: ~5-10% drop for cross-NIC pipelines
+
+
+def single_pipeline_gbps(lat: dict) -> float:
+    return PKT_BITS / (max(lat.values()) * 1e-6) / 1e9
+
+
+def run(emit=print) -> dict:
+    out = {}
+    for app, lat in APP_STAGE_LATENCY_US.items():
+        stages = list(lat)
+        base = single_pipeline_gbps(lat)
+        for n in (1, 2, 4, 7):
+            local = base * n * (1 - PARTITION_OVERHEAD)
+            remote = local * (1 - REMOTE_PENALTY) if n > 1 else local
+            # latency from the event simulator + hop penalties
+            R1 = {s: 1 for s in stages}
+            res = sim.simulate(stages, {s: lat[s] for s in stages}, R1, 50,
+                               arrival_interval=max(lat.values()))
+            lat_local = res.avg_latency + (0.4 if n > 1 else 0.0)  # TO partition
+            lat_remote = lat_local + (HOP_US + 2.0 if n > 1 else 0.0)
+            out[(app, n)] = (local, remote)
+            emit(row(f"fig9_{app}_p{n}_local", lat_local,
+                     f"{local:.2f}Gbps"))
+            emit(row(f"fig9_{app}_p{n}_remote", lat_remote,
+                     f"{remote:.2f}Gbps"))
+        emit(row(f"fig9_{app}_baseline", res.avg_latency, f"{base:.2f}Gbps"))
+    # headline checks (paper: FW/FM ~25 Gbps @7, LLB ~60 Gbps @7)
+    for app, target in (("FW", 25.0), ("FM", 25.0), ("LLB", 60.0)):
+        got = out[(app, 7)][0]
+        emit(row(f"fig9_check_{app}@7", 0.0,
+                 f"{got:.1f}Gbps_vs_paper~{target}Gbps"))
+    return out
+
+
+def main() -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

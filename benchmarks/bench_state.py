@@ -1,0 +1,58 @@
+"""Fig 20 (+ Appendix C): state-engine read/write latencies, local vs remote,
+TRAVERSE and COMPUTE — measured on our linked-hash-table implementation.
+The paper's trend to reproduce: reads overtake writes at high state counts
+(h_key collision scans), TRAVERSE >> COMPUTE (bulk pull vs shipped add)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import row
+from repro.core.state_engine import StateService
+
+
+def run(emit=print) -> dict:
+    out = {}
+    for log_n in (8, 10, 12, 14):
+        n = 2 ** log_n
+        svc = StateService(["nicA", "nicB"], buckets=4096)
+        t0 = time.perf_counter()
+        for i in range(n):
+            svc.ne_set(f"s{i}", i, local="nicA")
+        w_us = (time.perf_counter() - t0) / n * 1e6
+        t0 = time.perf_counter()
+        for i in range(n):
+            svc.get(f"s{i}", local="nicA")
+        r_us = (time.perf_counter() - t0) / n * 1e6
+        t0 = time.perf_counter()
+        for i in range(0, n, max(1, n // 256)):
+            svc.get(f"s{i}", local="nicB")       # remote read path
+        rr_us = (time.perf_counter() - t0) / max(1, n // max(1, n // 256)) * 1e6
+        out[n] = (w_us, r_us)
+        emit(row(f"fig20_write_{n}", w_us, "local"))
+        emit(row(f"fig20_read_{n}", r_us, "local"))
+        emit(row(f"fig20_read_remote_{n}", rr_us, "remote"))
+    # TRAVERSE vs COMPUTE across 8 engines
+    svc = StateService([f"nic{i}" for i in range(8)], buckets=4096)
+    for i in range(2 ** 12):
+        svc.ne_set(f"k{i}", i, local=f"nic{i % 8}")
+    t0 = time.perf_counter()
+    entries = svc.traverse(local="nic0")
+    tr_ms = (time.perf_counter() - t0) * 1e3
+    svc.fstate_set("agg", 1)
+    t0 = time.perf_counter()
+    svc.compute("agg", ucf=lambda vals: sum(vals), combine=sum)
+    cp_us = (time.perf_counter() - t0) * 1e6
+    emit(row("appC_traverse_4096x8", tr_ms * 1e3,
+             f"{tr_ms:.2f}ms_paper~10.7ms"))
+    emit(row("appC_compute", cp_us, f"{cp_us:.1f}us_paper~64us"))
+    out["traverse_ms"] = tr_ms
+    out["compute_us"] = cp_us
+    return out
+
+
+def main() -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

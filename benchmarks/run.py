@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Mapping:
+  bench_pipeline     -> Fig 7/8  (Algorithm 1 partial replication)
+  bench_scalability  -> Fig 9/10 (single-flow throughput/latency scaling)
+  bench_efficiency   -> Fig 11   (resource efficiency vs two baselines)
+  bench_bandwidth    -> Fig 13   (allocation under bandwidth constraints)
+  bench_adaptive     -> Fig 14 + Fig 18 (adaptive scaling, failover)
+  bench_redirection  -> Fig 15/16/17 (TO microbenchmarks)
+  bench_state        -> Fig 20 + App. C (state engine ops)
+  bench_kernels      -> kernel hot-spots (µs/call + TPU roofline context)
+"""
+import sys
+import traceback
+
+from benchmarks import (bench_adaptive, bench_bandwidth, bench_efficiency,
+                        bench_kernels, bench_pipeline, bench_redirection,
+                        bench_scalability, bench_state)
+
+ALL = [
+    ("fig7_8", bench_pipeline),
+    ("fig9_10", bench_scalability),
+    ("fig11", bench_efficiency),
+    ("fig13", bench_bandwidth),
+    ("fig14_18", bench_adaptive),
+    ("fig15_17", bench_redirection),
+    ("fig20", bench_state),
+    ("kernels", bench_kernels),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in ALL:
+        try:
+            mod.run(emit=print)
+        except Exception:                      # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},0,ERROR")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

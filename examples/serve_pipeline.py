@@ -1,0 +1,22 @@
+"""Meili-planned LM serving example: per-segment replication (Algorithm 1)
+over heterogeneous model stages + batched request serving.
+
+  PYTHONPATH=src python examples/serve_pipeline.py --arch jamba-1.5-large-398b
+
+The jamba-family reduced config has genuinely heterogeneous stages (mamba vs
+attention vs MoE segments), so the Meili planner produces a non-trivial
+replication plan — the paper's partial pipeline replication applied to an LM.
+"""
+import sys
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    argv = sys.argv[1:] or ["--arch", "jamba-1.5-large-398b"]
+    serve_mod.main(argv + ["--reduced", "--requests", "12", "--tokens", "8",
+                           "--slots", "4", "--max-len", "32"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Synthetic traffic generation — the DPDK-Pktgen / MACCDC-replay stand-in.
+
+Deterministic (seeded) flows of 1500 B packets; a configurable fraction of
+payloads embed rule-matching byte patterns so regex stages do real work.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import PKT_BYTES, PacketBatch, make_packets
+
+
+def synth_packets(batch: int = 256, num_flows: int = 32, seed: int = 0,
+                  pkt_bytes: int = PKT_BYTES,
+                  embed_patterns: Sequence[str] = ("attack", "GET /admin"),
+                  embed_frac: float = 0.1) -> PacketBatch:
+    rng = np.random.default_rng(seed)
+    payload = rng.integers(0, 256, size=(batch, pkt_bytes), dtype=np.uint8)
+    # Embed known patterns into a fraction of packets (MACCDC has hits too).
+    n_embed = int(batch * embed_frac)
+    for i in range(n_embed):
+        pat = embed_patterns[i % len(embed_patterns)].encode()
+        pos = rng.integers(0, pkt_bytes - len(pat))
+        payload[i, pos:pos + len(pat)] = np.frombuffer(pat, dtype=np.uint8)
+    length = np.full((batch,), pkt_bytes, dtype=np.int32)
+    flows = rng.integers(0, num_flows, size=(batch,))
+    five = np.zeros((batch, 5), dtype=np.int32)
+    five[:, 0] = 0x0A000000 + flows          # src ip per flow
+    five[:, 1] = 0x0A800000 + (flows // 4)   # dst ip
+    five[:, 2] = 1024 + flows                # sport
+    five[:, 3] = 443                         # dport
+    five[:, 4] = 6                           # TCP
+    return make_packets(jnp.asarray(payload), jnp.asarray(length),
+                        jnp.asarray(five))

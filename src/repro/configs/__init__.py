@@ -1,0 +1,18 @@
+"""Assigned architecture configs (+ registry). --arch <id> resolves here."""
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, cells, skipped_cells
+
+from repro.configs import (seamless_m4t_medium, minicpm_2b, gemma3_1b, olmo_1b,
+                           qwen2_5_32b, moonshot_v1_16b_a3b,
+                           phi3_5_moe_42b_a6_6b, mamba2_370m, llava_next_34b,
+                           jamba_1_5_large_398b)
+
+ARCHS = {m.CONFIG.name: m.CONFIG for m in (
+    seamless_m4t_medium, minicpm_2b, gemma3_1b, olmo_1b, qwen2_5_32b,
+    moonshot_v1_16b_a3b, phi3_5_moe_42b_a6_6b, mamba2_370m, llava_next_34b,
+    jamba_1_5_large_398b)}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]

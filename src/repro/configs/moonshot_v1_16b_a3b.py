@@ -1,0 +1,12 @@
+"""moonshot-v1-16b-a3b [hf:moonshotai/Moonlight-16B-A3B; hf] — MoE 64e top-6.
+
+48L, d_model=2048, 16H (kv=16), per-expert d_ff=1408, vocab=163840,
+64 experts top-6, leading dense layer (DeepSeek-style stack).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="moonshot-v1-16b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=16, n_kv_heads=16, d_ff=1408,
+    vocab=163840, d_head=128, n_experts=64, top_k=6, first_dense=1,
+    tie_embeddings=True, microbatch=16)

@@ -1,0 +1,21 @@
+"""Meili core — the paper's primary contribution in JAX.
+
+Programming model (graph, accel), scalable data plane (replication,
+ringbuffer, orchestrator, executor, state_engine), unified control plane
+(pool, allocation, profiler, controller), and a discrete-event timing
+simulator (sim) used to validate the pipeline math without NIC hardware.
+"""
+
+from repro.core.replication import (num_replication, num_pipelines,
+                                    pipeline_throughput, efficiency,
+                                    full_replication)
+from repro.core.allocation import resource_alloc, Allocation, commit, release
+from repro.core.graph import (MeiliApp, PacketBatch, FlowBatch, Function,
+                              make_packets, run_pipeline, PKT_BYTES)
+from repro.core.pool import Pool, NicSpec, paper_cluster, tpu_pod_pool, CPU
+from repro.core.controller import MeiliController, Deployment
+from repro.core.orchestrator import TrafficOrchestrator
+from repro.core.executor import ParallelDataPlane, PipelineRunner
+from repro.core.state_engine import (StateService, bounded_sync,
+                                     bounded_sync_deltas)
+from repro.core.profiler import measure_app, synthetic_profile, AppProfile

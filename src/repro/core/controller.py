@@ -1,0 +1,246 @@
+"""Meili Controller + per-NIC Controller Agents (paper §3, §6, Appendix D).
+
+The controller receives (program, throughput target) submissions
+(``app_sub_thr``), derives the replication plan with Algorithm 1, computes
+resource demand from the profiled throughputs, places units with
+Algorithm 2/3, and deploys: per-pipeline ring buffers, TO flow tables,
+executors. It keeps per-NIC state synchronized via CAs, performs adaptive
+scaling when targets change, and fails over to backup NICs.
+
+Demand formula (§6.1): with profile (t_p, l_p, t_s, l_s), Algorithm 1 gives
+R; the R-allocation's throughput t_R is estimated from the replication-aware
+pipeline rate; then
+
+    r_s = R · ⌊t_t / t_R⌋            (whole R-granular pipeline groups)
+        + I · ⌈(t_t − ⌊t_t/t_R⌋·t_R) / t_p⌉   (minimal-granularity remainder)
+
+FCFS across applications; unsatisfiable targets are placed best-effort.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.core import allocation as alloc_mod
+from repro.core import replication
+from repro.core.allocation import Allocation, commit, release, resource_alloc
+from repro.core.graph import MeiliApp
+from repro.core.orchestrator import TrafficOrchestrator
+from repro.core.pool import Pool
+from repro.core.profiler import AppProfile
+from repro.core.state_engine import StateService
+
+
+@dataclasses.dataclass
+class Deployment:
+    app: MeiliApp
+    target_gbps: float
+    profile: AppProfile
+    R: Dict[str, int]
+    r_s: Dict[str, int]
+    allocation: Allocation
+    num_pipelines: int
+    to: TrafficOrchestrator
+    achievable_gbps: float
+    backup_nic: Optional[str] = None
+    state_snapshot: Optional[dict] = None
+
+    def nics_used(self) -> List[str]:
+        return [n for n, row in self.allocation.A.items()
+                if any(v > 0 for v in row.values())]
+
+
+class ControllerAgent:
+    """Per-NIC agent: Resource Manager + Runtime Manager (paper §3)."""
+
+    def __init__(self, nic: str, pool: Pool):
+        self.nic = nic
+        self.pool = pool
+
+    def status(self) -> dict:
+        st = self.pool[self.nic]
+        return {"nic": self.nic, "alive": st.alive, "free": dict(st.free),
+                "free_bw_gbps": st.free_bw_gbps}
+
+
+class MeiliController:
+    def __init__(self, pool: Pool, clock: Callable[[], float] = time.monotonic):
+        self.pool = pool
+        self.agents = {n: ControllerAgent(n, pool) for n in pool.nics}
+        self.deployments: Dict[str, Deployment] = {}
+        self.state = StateService(list(pool.nics))
+        self.clock = clock
+        self.events: List[dict] = []    # controller action log (scaling/failover)
+
+    # -- §6.1 demand calculation -------------------------------------------------
+    def demand(self, profile: AppProfile, target_gbps: float
+               ) -> tuple[Dict[str, int], Dict[str, int], float]:
+        stages = profile.stages
+        R = replication.num_replication(stages, profile.l_s)
+        # throughput of one R-allocated pipeline group (Gbps)
+        rate = replication.pipeline_throughput(stages, profile.l_s, R)  # seq/s
+        t_R = rate * profile.batch_bits() / 1e9
+        n_groups = int(math.floor(target_gbps / t_R))
+        r_s = {s: R[s] * n_groups for s in stages}
+        rem = target_gbps - n_groups * t_R
+        if rem > 1e-9:
+            n_min = int(math.ceil(rem / profile.t_p))
+            for s in stages:
+                r_s[s] += n_min  # I = one minimal unit per stage
+        return R, r_s, t_R
+
+    # -- submission (Meili.app_sub_thr) -------------------------------------------
+    def submit(self, app: MeiliApp, target_gbps: float, profile: AppProfile,
+               backup_nic: Optional[str] = None) -> Deployment:
+        R, r_s, t_R = self.demand(profile, target_gbps)
+        need = app.resource_needs()
+        alloc = resource_alloc(profile.stages, r_s, profile.t_s, self.pool, need)
+        commit(self.pool, alloc, need)
+        achievable = self._achievable(profile, alloc, r_s)
+        num_pipes = max(1, max((alloc.units(s) for s in profile.stages),
+                               default=1))
+        cap = self._pipeline_capacity(profile, num_pipes)
+        to = TrafficOrchestrator(num_pipelines=num_pipes,
+                                 capacity_per_pipeline=cap)
+        for name, decl in app.state_decls.items():
+            self.state.declare(name, decl["pattern"])
+        placed = {s: alloc.units(s) for s in profile.stages}  # track placement,
+        dep = Deployment(app=app, target_gbps=target_gbps, profile=profile,
+                         R=R, r_s=placed, allocation=alloc,
+                         num_pipelines=num_pipes, to=to,
+                         achievable_gbps=achievable, backup_nic=backup_nic)
+        self.deployments[app.name] = dep
+        self.events.append({"t": self.clock(), "event": "deploy", "app": app.name,
+                            "target": target_gbps, "achievable": achievable})
+        return dep
+
+    def terminate(self, app_name: str) -> None:
+        dep = self.deployments.pop(app_name)
+        release(self.pool, dep.allocation, dep.app.resource_needs(),
+                dep.profile.t_s)
+
+    # -- §6.1 adaptive scaling ------------------------------------------------------
+    def adaptive_scale(self, app_name: str, new_target_gbps: float) -> Deployment:
+        """Recompute demand and adjust allocation incrementally: current
+        runtime is kept; extra pipelines are added (or halted + flows
+        migrated) to meet the new target."""
+        t0 = self.clock()
+        dep = self.deployments[app_name]
+        need = dep.app.resource_needs()
+        R, r_s_new, _ = self.demand(dep.profile, new_target_gbps)
+        delta = {s: r_s_new[s] - dep.r_s.get(s, 0) for s in dep.profile.stages}
+
+        if any(d > 0 for d in delta.values()):
+            grow = {s: max(0, d) for s, d in delta.items()}
+            extra = resource_alloc(dep.profile.stages, grow, dep.profile.t_s,
+                                   self.pool, need)
+            commit(self.pool, extra, need)
+            for n, row in extra.A.items():
+                for s, u in row.items():
+                    dep.allocation.A.setdefault(n, {})[s] = \
+                        dep.allocation.A.get(n, {}).get(s, 0) + u
+            dep.allocation.bw_after.update(extra.bw_after)
+        if any(d < 0 for d in delta.values()):
+            self._shrink(dep, {s: -d for s, d in delta.items() if d < 0}, need)
+
+        dep.r_s = {s: dep.allocation.units(s) for s in dep.profile.stages}
+        new_pipes = max(1, max(dep.r_s.values(), default=1))
+        cap = self._pipeline_capacity(dep.profile, new_pipes)
+        while len(dep.to.pipelines) < new_pipes:
+            dep.to.add_pipeline(cap)
+        for p in dep.to.pipelines:
+            p.capacity = cap
+        if len([p for p in dep.to.pipelines if p.active]) > new_pipes:
+            for p in dep.to.pipelines[new_pipes:]:
+                if p.active:
+                    for f in dep.to.halt_pipeline(p.pid):
+                        dep.to.begin_migration(f)
+                        dep.to.finish_migration(f, dst_pid=0)
+        dep.num_pipelines = new_pipes
+        dep.target_gbps = new_target_gbps
+        dep.achievable_gbps = self._achievable(dep.profile, dep.allocation,
+                                               dep.r_s)
+        self.events.append({"t": self.clock(), "event": "scale", "app": app_name,
+                            "target": new_target_gbps,
+                            "response_s": self.clock() - t0})
+        return dep
+
+    def _shrink(self, dep: Deployment, give_back: Dict[str, int],
+                need: Dict[str, str]) -> None:
+        for s, n in give_back.items():
+            left = n
+            for nic, row in dep.allocation.A.items():
+                if left <= 0:
+                    break
+                have = row.get(s, 0)
+                take = min(have, left)
+                if take > 0:
+                    row[s] = have - take
+                    self.pool[nic].give(need[s], take)
+                    self.pool[nic].free_bw_gbps = min(
+                        self.pool[nic].free_bw_gbps + take * dep.profile.t_s[s],
+                        self.pool[nic].spec.bandwidth_gbps)
+                    left -= take
+
+    # -- Appendix D: failover -----------------------------------------------------
+    def replicate_for_failover(self, app_name: str) -> None:
+        """Periodic state + packet-cache replication to the backup NIC."""
+        dep = self.deployments[app_name]
+        if dep.backup_nic is None:
+            return
+        entries = self.state.traverse(local=dep.backup_nic)
+        dep.state_snapshot = {e.s_name: e.value for e in entries}
+
+    def handle_failure(self, nic: str) -> List[str]:
+        """NIC (or its link) failed: re-place affected stage units, restore
+        state from the last synchronized snapshot, re-home flows."""
+        t0 = self.clock()
+        self.pool.mark_failed(nic)
+        impacted: List[str] = []
+        for name, dep in self.deployments.items():
+            lost = dict(dep.allocation.A.get(nic, {}))
+            if not any(v > 0 for v in lost.values()):
+                continue
+            impacted.append(name)
+            dep.allocation.A[nic] = {}
+            need = dep.app.resource_needs()
+            # Re-place exactly the units lost on the failed NIC.
+            lost_demand = {s: lost.get(s, 0) for s in dep.profile.stages}
+            replacement = resource_alloc(dep.profile.stages, lost_demand,
+                                         dep.profile.t_s, self.pool, need)
+            commit(self.pool, replacement, need)
+            for n, row in replacement.A.items():
+                for s, u in row.items():
+                    dep.allocation.A.setdefault(n, {})[s] = \
+                        dep.allocation.A.get(n, {}).get(s, 0) + u
+            unmet = {s: u for s, u in replacement.unmet.items() if u > 0}
+            dep.r_s = {s: dep.allocation.units(s) for s in dep.profile.stages}
+            dep.achievable_gbps = self._achievable(dep.profile, dep.allocation,
+                                                   dep.r_s)
+            if dep.state_snapshot:
+                for k, v in dep.state_snapshot.items():
+                    self.state.fstate_set(k, v)
+            self.events.append({"t": self.clock(), "event": "failover",
+                                "app": name, "nic": nic, "unmet": unmet,
+                                "response_s": self.clock() - t0})
+        return impacted
+
+    # -- CA synchronization (paper §3: periodic status sync) ------------------------
+    def tick(self) -> dict:
+        return {n: a.status() for n, a in self.agents.items()}
+
+    # -- helpers ---------------------------------------------------------------------
+    def _achievable(self, profile: AppProfile, alloc: Allocation,
+                    r_s: Dict[str, int]) -> float:
+        """Throughput the placed units sustain: per-stage placed capacity min."""
+        caps = []
+        for s in profile.stages:
+            units = alloc.units(s)
+            caps.append(units * profile.t_s[s])
+        return min(caps) if caps else 0.0
+
+    def _pipeline_capacity(self, profile: AppProfile, num_pipes: int) -> float:
+        """Packets per partition round per pipeline (for the TO's flow table)."""
+        return max(1.0, 1024.0 / max(1, num_pipes))

@@ -1,0 +1,183 @@
+"""Meili programming model (paper §4): functions, packet/socket paradigms.
+
+Applications are chains/DAGs of fine-grained *functions*; each function is a
+user-customized callback (UCF) over one of two base abstractions:
+
+  * ``PacketBatch``  — the ``Meili_packet`` analog, batched for TPU: headers
+    (5-tuple), payload bytes, lengths, a liveness mask (pkt_flt drops), and a
+    per-packet metadata dict that UCFs may read/compute/extend.
+  * ``FlowBatch``    — the ``Meili_flow`` analog: connection descriptor plus
+    per-connection metadata.
+
+Paradigm operations (Table 2): pkt_trans / pkt_flt / flow_ext / flow_trans
+for packet processing; reg_sock / epoll for socket processing (modeled as
+event batches); Accelerator Function APIs (regex / AES / compression / ...)
+are provided by ``core.accel`` and appear as ordinary stages with a non-CPU
+resource kind, which is exactly what Algorithm 2 needs for placement.
+
+UCFs must be JAX-traceable; each stage compiles to one jitted program (the
+Executor). Stage granularity is the unit of replication (Algorithm 1) and
+placement (Algorithm 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pool import CPU
+
+PKT_BYTES = 1500  # paper: 1500B packet buffers (§5.1.2, §8 methodology)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PacketBatch:
+    """Batched Meili_packet: (B,) packets processed as one sequence batch."""
+
+    payload: jnp.ndarray                 # (B, PKT_BYTES) uint8
+    length: jnp.ndarray                  # (B,) int32 valid payload bytes
+    five_tuple: jnp.ndarray              # (B, 5) int32: sip dip sport dport proto
+    mask: jnp.ndarray                    # (B,) bool — False once dropped
+    meta: Dict[str, jnp.ndarray]         # per-packet metadata (UCF-computed)
+
+    @property
+    def batch(self) -> int:
+        return self.payload.shape[0]
+
+    def with_meta(self, **kv: jnp.ndarray) -> "PacketBatch":
+        return dataclasses.replace(self, meta={**self.meta, **kv})
+
+
+def make_packets(payload: jnp.ndarray, length: jnp.ndarray,
+                 five_tuple: jnp.ndarray) -> PacketBatch:
+    b = payload.shape[0]
+    return PacketBatch(payload=payload.astype(jnp.uint8),
+                       length=length.astype(jnp.int32),
+                       five_tuple=five_tuple.astype(jnp.int32),
+                       mask=jnp.ones((b,), jnp.bool_), meta={})
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FlowBatch:
+    """Batched Meili_flow: per-connection descriptor + metadata."""
+
+    five_tuple: jnp.ndarray              # (F, 5) int32
+    meta: Dict[str, jnp.ndarray]
+
+    @property
+    def flows(self) -> int:
+        return self.five_tuple.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class Function:
+    """One pipeline stage: a named UCF plus its resource kind."""
+
+    name: str
+    kind: str                            # pkt_trans|pkt_flt|flow_ext|flow_trans|accel|socket
+    ucf: Callable[..., Any]
+    resource: str = CPU                  # CPU or accelerator kind (pool.REGEX, ...)
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+class MeiliApp:
+    """Application = ordered chain of Functions (Listing 1 style).
+
+    The paper describes a DAG; its algorithms (1, 2) and all six evaluation
+    apps use linear chains, so the chain is the first-class form here.
+    """
+
+    def __init__(self, name: str):
+        self.name = name
+        self.stages: List[Function] = []
+        self.state_decls: Dict[str, dict] = {}
+
+    # -- packet paradigm ------------------------------------------------------
+    def pkt_trans(self, ucf: Callable[[PacketBatch], PacketBatch],
+                  name: Optional[str] = None) -> "MeiliApp":
+        self.stages.append(Function(name or ucf.__name__, "pkt_trans", ucf))
+        return self
+
+    def pkt_flt(self, ucf: Callable[[PacketBatch], jnp.ndarray],
+                name: Optional[str] = None) -> "MeiliApp":
+        """UCF returns a keep-mask (B,) bool; dropped packets stay masked out."""
+        self.stages.append(Function(name or ucf.__name__, "pkt_flt", ucf))
+        return self
+
+    def flow_ext(self, ucf: Callable[[PacketBatch], jnp.ndarray], window: int,
+                 slide: int, name: Optional[str] = None) -> "MeiliApp":
+        """UCF maps packets -> flow keys; packets pass through unmodified."""
+        self.stages.append(Function(name or ucf.__name__, "flow_ext", ucf,
+                                    params={"window": window, "slide": slide}))
+        return self
+
+    def flow_trans(self, ucf: Callable[[PacketBatch, FlowBatch], FlowBatch],
+                   name: Optional[str] = None) -> "MeiliApp":
+        self.stages.append(Function(name or ucf.__name__, "flow_trans", ucf))
+        return self
+
+    # -- accelerator stages (core.accel supplies the UCF) ----------------------
+    def accel(self, fn: Function) -> "MeiliApp":
+        self.stages.append(fn)
+        return self
+
+    # -- socket paradigm (event-batch model; see DESIGN.md §2) -----------------
+    def reg_sock(self, name: str = "reg_sock") -> "MeiliApp":
+        self.stages.append(Function(name, "socket", lambda b: b))
+        return self
+
+    def epoll(self, ucf: Callable[[PacketBatch], PacketBatch], event: str = "EPOLLIN",
+              name: Optional[str] = None) -> "MeiliApp":
+        self.stages.append(Function(name or ucf.__name__, "socket", ucf,
+                                    params={"event": event}))
+        return self
+
+    # -- state declarations (wired to core.state_engine at deploy) -------------
+    def declare_state(self, name: str, pattern: str, shape=(), dtype=jnp.int32):
+        assert pattern in ("non-external-write", "full-access")
+        self.state_decls[name] = dict(pattern=pattern, shape=shape, dtype=dtype)
+        return self
+
+    # -- introspection ----------------------------------------------------------
+    def stage_names(self) -> List[str]:
+        return [f.name for f in self.stages]
+
+    def resource_needs(self) -> Dict[str, str]:
+        return {f.name: f.resource for f in self.stages}
+
+
+def apply_stage(fn: Function, batch: PacketBatch) -> PacketBatch:
+    """Execute one stage on a batch (the Executor's inner body)."""
+    if fn.kind == "pkt_trans" or fn.kind == "socket" or fn.kind == "accel":
+        out = fn.ucf(batch)
+        return out if isinstance(out, PacketBatch) else batch
+    if fn.kind == "pkt_flt":
+        keep = fn.ucf(batch)
+        return dataclasses.replace(batch, mask=batch.mask & keep)
+    if fn.kind == "flow_ext":
+        keys = fn.ucf(batch)
+        return batch.with_meta(flow_key=keys)
+    if fn.kind == "flow_trans":
+        # Flow view derived on the fly; UCF updates flow metadata which is
+        # scattered back to per-packet meta by key.
+        flows = FlowBatch(five_tuple=batch.five_tuple, meta=dict(batch.meta))
+        out = fn.ucf(batch, flows)
+        return batch.with_meta(**out.meta)
+    raise ValueError(f"unknown stage kind {fn.kind}")
+
+
+def run_pipeline(app: MeiliApp, batch: PacketBatch) -> PacketBatch:
+    """Reference single-pipeline execution (no replication) — the semantic
+    oracle against which the parallel data plane is tested."""
+    for fn in app.stages:
+        batch = apply_stage(fn, batch)
+    return batch
+
+
+def stage_runner(fn: Function) -> Callable[[PacketBatch], PacketBatch]:
+    """A jit-compiled single-stage program (one Executor)."""
+    return jax.jit(lambda b: apply_stage(fn, b))

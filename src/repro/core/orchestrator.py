@@ -1,0 +1,181 @@
+"""Per-application Traffic Orchestrator (paper §5.1.2, §5.2).
+
+The TO runs on a host core (paper: one reserved ARM core per NIC) and manages
+the application's replicated pipelines:
+
+  * a **flow table** mapping flow-id -> pipeline-id plus per-pipeline load;
+  * **flow-granular partitioning**: packets of an existing flow stick to its
+    pipeline; a heavy flow spills to additional pipelines only once its
+    current pipeline hits its per-round capacity; new flows go to the
+    pipeline with the highest available capacity;
+  * **sequence-numbered aggregation**: each sub-batch carries a unique
+    sequence number; egress batches are reordered so the application observes
+    the original packet order;
+  * **lazy flow state migration** between pipelines during adaptive scaling.
+
+Control decisions (dict lookups over ~128 flows) are host-side numpy —
+exactly where they run in the paper; the data movement (gather/scatter of
+packet tensors) is JAX.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import PacketBatch
+
+
+def flow_ids(batch: PacketBatch) -> np.ndarray:
+    """Stable per-packet flow id from the 5-tuple (host-side)."""
+    ft = np.asarray(batch.five_tuple, dtype=np.int64)
+    h = ft[:, 0] * 1000003 + ft[:, 1] * 10007 + ft[:, 2] * 101 + ft[:, 3] * 13 + ft[:, 4]
+    return h
+
+
+def take_batch(batch: PacketBatch, idx: jnp.ndarray) -> PacketBatch:
+    """Gather a sub-batch (device-side data movement)."""
+    return jax.tree.map(lambda a: a[idx], batch)
+
+
+@dataclasses.dataclass
+class SubBatch:
+    """One partitioned unit: pipeline id, sequence number, original indices."""
+
+    pid: int
+    seq: int
+    indices: np.ndarray          # positions in the source batch
+    data: PacketBatch
+
+
+@dataclasses.dataclass
+class PipelineStatus:
+    pid: int
+    capacity: float              # packets per partition round
+    load: float = 0.0            # packets assigned this round
+    active: bool = True
+
+    @property
+    def available(self) -> float:
+        return max(0.0, self.capacity - self.load) if self.active else 0.0
+
+
+class TrafficOrchestrator:
+    def __init__(self, num_pipelines: int, capacity_per_pipeline: float):
+        self.pipelines: List[PipelineStatus] = [
+            PipelineStatus(pid=i, capacity=capacity_per_pipeline)
+            for i in range(num_pipelines)
+        ]
+        self.flow_table: Dict[int, int] = {}
+        self.spill_table: Dict[int, List[int]] = {}         # heavy-flow extras
+        self.halted_flows: Dict[int, List[SubBatch]] = {}   # migration buffers
+        self._seq = 0
+
+    # -- §5.1.2 traffic partitioning ------------------------------------------
+    def partition(self, batch: PacketBatch) -> List[SubBatch]:
+        """Split an ingress batch across pipelines, flow-granular."""
+        fids = flow_ids(batch)
+        B = len(fids)
+        for p in self.pipelines:
+            p.load = 0.0
+        assign = np.full(B, -1, dtype=np.int64)
+
+        order = np.arange(B)
+        for i in order:
+            f = int(fids[i])
+            if f in self.halted_flows:
+                assign[i] = -2  # buffered during migration
+                continue
+            pid = self.flow_table.get(f)
+            if pid is not None and self.pipelines[pid].active and \
+                    self.pipelines[pid].available >= 1.0:
+                assign[i] = pid
+                self.pipelines[pid].load += 1.0
+                continue
+            # Heavy flow already spilled: keep using its spill pipelines so
+            # the flow touches as FEW pipelines as possible (§5.1.2).
+            cand = None
+            for spid in self.spill_table.get(f, ()):
+                p = self.pipelines[spid]
+                if p.active and p.available >= 1.0:
+                    cand = p
+                    break
+            if cand is None:
+                # New flow, saturated, or halted: the pipeline with the
+                # highest available capacity (§5.2).
+                cand = max((p for p in self.pipelines if p.active),
+                           key=lambda p: p.available, default=None)
+                if cand is None or cand.available < 1.0:
+                    cand = max((p for p in self.pipelines if p.active),
+                               key=lambda p: p.capacity)
+                if pid is not None and cand.pid != pid:
+                    self.spill_table.setdefault(f, []).append(cand.pid)
+            assign[i] = cand.pid
+            cand.load += 1.0
+            if pid is None:
+                self.flow_table[f] = cand.pid  # first pipeline stays "home"
+
+        subs: List[SubBatch] = []
+        for pid in range(len(self.pipelines)):
+            idx = np.nonzero(assign == pid)[0]
+            if idx.size == 0:
+                continue
+            subs.append(SubBatch(pid=pid, seq=self._seq,
+                                 indices=idx,
+                                 data=take_batch(batch, jnp.asarray(idx))))
+            self._seq += 1
+        # Buffer packets of halted (migrating) flows.
+        hidx = np.nonzero(assign == -2)[0]
+        if hidx.size:
+            for f in set(int(x) for x in fids[hidx]):
+                sel = hidx[fids[hidx] == f]
+                self.halted_flows[f].append(
+                    SubBatch(pid=-1, seq=self._seq, indices=sel,
+                             data=take_batch(batch, jnp.asarray(sel))))
+                self._seq += 1
+        return subs
+
+    # -- §5.1.2 aggregation -----------------------------------------------------
+    @staticmethod
+    def aggregate(subs: Sequence[SubBatch], total: int) -> PacketBatch:
+        """Reorder processed sub-batches back to original packet order."""
+        subs = sorted(subs, key=lambda s: s.seq)
+        all_idx = np.concatenate([s.indices for s in subs])
+        inv = np.empty(total, dtype=np.int64)
+        if all_idx.size != total:
+            raise ValueError(f"aggregate: {all_idx.size} packets != batch {total}")
+        inv[all_idx] = np.arange(total)
+        cat = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                           *[s.data for s in subs])
+        return jax.tree.map(lambda a: a[jnp.asarray(inv)], cat)
+
+    # -- §5.2 flow state migration ----------------------------------------------
+    def begin_migration(self, flow: int) -> None:
+        """Halt a flow: subsequent packets buffer in the TO's side ring."""
+        self.halted_flows.setdefault(flow, [])
+
+    def finish_migration(self, flow: int, dst_pid: int) -> List[SubBatch]:
+        """Re-home the flow and release its buffered packets to dst."""
+        self.flow_table[flow] = dst_pid
+        buffered = self.halted_flows.pop(flow, [])
+        for s in buffered:
+            s.pid = dst_pid
+        return buffered
+
+    # -- adaptive scaling hooks (§6.1) -------------------------------------------
+    def add_pipeline(self, capacity: float) -> int:
+        pid = len(self.pipelines)
+        self.pipelines.append(PipelineStatus(pid=pid, capacity=capacity))
+        return pid
+
+    def halt_pipeline(self, pid: int) -> List[int]:
+        """Deactivate a pipeline; returns the flows that must migrate."""
+        self.pipelines[pid].active = False
+        return [f for f, p in self.flow_table.items() if p == pid]
+
+    def utilization(self) -> Dict[int, float]:
+        return {p.pid: (p.load / p.capacity if p.capacity else 0.0)
+                for p in self.pipelines}

@@ -1,0 +1,156 @@
+"""Resource-pool model: SmartNICs / TPU device groups as poolable resources.
+
+The paper (§3, §6) manages a rack of heterogeneous SmartNICs as one pool.
+Each NIC exposes: SoC cores ("resource units"), domain-specific accelerators
+(regex / crypto / compression), and link bandwidth. On TPU, a "NIC" maps to a
+*device group* (a mesh neighborhood) whose "accelerators" are Pallas-kernel
+capabilities; see DESIGN.md §2. The pool abstraction is shared by both.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+# Resource type for CPU-like general cores (paper: ARM A72 "resource units").
+CPU = "cpu"
+
+# Accelerator kinds that appear in the paper's cluster.
+REGEX = "regex"
+CRYPTO = "crypto"          # paper: AES accelerator (Pensando)
+COMPRESSION = "compression"
+# TPU-side capabilities (beyond-paper tenants).
+ATTENTION = "attention"
+SSD = "ssd"
+
+
+@dataclasses.dataclass
+class NicSpec:
+    """Static description of one pool member (SmartNIC or device group)."""
+
+    name: str
+    kind: str                       # e.g. "bf2", "bf1", "pensando", "tpu-v5e-group"
+    cores: int                      # resource units
+    accelerators: Dict[str, int]    # accel kind -> count
+    bandwidth_gbps: float           # NIC link bandwidth (TPU: ICI egress of the group)
+    core_mem_gb: float = 4.0        # paper: 1 core + 4 GB = one resource unit
+
+    def has(self, resource: str) -> bool:
+        if resource == CPU:
+            return self.cores > 0
+        return self.accelerators.get(resource, 0) > 0
+
+    def capacity(self, resource: str) -> int:
+        if resource == CPU:
+            return self.cores
+        return self.accelerators.get(resource, 0)
+
+
+@dataclasses.dataclass
+class NicState:
+    """Mutable, controller-tracked view of one pool member (CA-synced, §3)."""
+
+    spec: NicSpec
+    free: Dict[str, int] = dataclasses.field(default_factory=dict)
+    free_bw_gbps: float = 0.0
+    alive: bool = True
+
+    def __post_init__(self) -> None:
+        if not self.free:
+            self.free = {CPU: self.spec.cores, **dict(self.spec.accelerators)}
+        if not self.free_bw_gbps:
+            self.free_bw_gbps = self.spec.bandwidth_gbps
+
+    def available(self, resource: str) -> int:
+        return self.free.get(resource, 0) if self.alive else 0
+
+    def take(self, resource: str, n: int) -> None:
+        have = self.free.get(resource, 0)
+        if n > have:
+            raise ValueError(f"{self.spec.name}: cannot take {n} {resource}, only {have} free")
+        self.free[resource] = have - n
+
+    def give(self, resource: str, n: int) -> None:
+        self.free[resource] = self.free.get(resource, 0) + n
+
+
+class Pool:
+    """The cluster-wide SmartNIC/device-group pool (one per rack, paper §3)."""
+
+    def __init__(self, nics: List[NicSpec]):
+        self.nics: Dict[str, NicState] = {s.name: NicState(spec=s) for s in nics}
+
+    def names(self) -> List[str]:
+        return [n for n, st in self.nics.items() if st.alive]
+
+    def __getitem__(self, name: str) -> NicState:
+        return self.nics[name]
+
+    def mark_failed(self, name: str) -> None:
+        self.nics[name].alive = False
+
+    def revive(self, name: str) -> None:
+        self.nics[name].alive = True
+
+    def total(self, resource: str) -> int:
+        return sum(st.spec.capacity(resource) for st in self.nics.values() if st.alive)
+
+    def free_total(self, resource: str) -> int:
+        return sum(st.available(resource) for st in self.nics.values() if st.alive)
+
+    def utilization(self, resource: str) -> float:
+        tot = self.total(resource)
+        if tot == 0:
+            return 0.0
+        return 1.0 - self.free_total(resource) / tot
+
+    def snapshot(self) -> Dict[str, Dict[str, float]]:
+        """Controller-agent status sync (paper §3: CA <-> Meili Controller)."""
+        out = {}
+        for name, st in self.nics.items():
+            out[name] = {"alive": st.alive, "free_bw_gbps": st.free_bw_gbps, **st.free}
+        return out
+
+
+def paper_cluster(n_bf2: int = 8, n_bf1: int = 4, n_pensando: int = 4,
+                  bw_gbps: float = 100.0) -> Pool:
+    """The paper's evaluation cluster (§8 Methodology).
+
+    8x BlueField-2 (8 ARM cores, regex + compression), 4x BlueField-1
+    (16 cores, no accelerators), 4x Pensando (16 cores, AES + compression),
+    all with 100 GbE links. One core per NIC is reserved for the TO
+    (paper §8.1), so the usable core counts are 7/15/15.
+    """
+    nics: List[NicSpec] = []
+    for i in range(n_bf2):
+        nics.append(NicSpec(f"bf2-{i}", "bf2", cores=7,
+                            accelerators={REGEX: 1, COMPRESSION: 1},
+                            bandwidth_gbps=bw_gbps))
+    for i in range(n_bf1):
+        nics.append(NicSpec(f"bf1-{i}", "bf1", cores=15, accelerators={},
+                            bandwidth_gbps=bw_gbps))
+    for i in range(n_pensando):
+        nics.append(NicSpec(f"pensando-{i}", "pensando", cores=15,
+                            accelerators={CRYPTO: 1, COMPRESSION: 1},
+                            bandwidth_gbps=bw_gbps))
+    return Pool(nics)
+
+
+def tpu_pod_pool(groups: int = 16, chips_per_group: int = 16,
+                 ici_gbps_per_group: float = 4 * 50 * 8) -> Pool:
+    """A TPU v5e pod viewed as a Meili pool: each mesh row = one device group.
+
+    Chips stand in for "cores"; every group exposes the kernel capabilities
+    (attention / ssd / regex / crypto / compression run as Pallas programs).
+    Group egress bandwidth = 4 ICI links x 50 GB/s, expressed in Gbps.
+    """
+    nics = [
+        NicSpec(
+            f"group-{i}", "tpu-v5e-group", cores=chips_per_group,
+            accelerators={ATTENTION: chips_per_group, SSD: chips_per_group,
+                          REGEX: chips_per_group, CRYPTO: chips_per_group,
+                          COMPRESSION: chips_per_group},
+            bandwidth_gbps=ici_gbps_per_group,
+        )
+        for i in range(groups)
+    ]
+    return Pool(nics)

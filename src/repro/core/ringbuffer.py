@@ -1,0 +1,92 @@
+"""Lock-free per-pipeline ring buffers (paper §5.1.2), JAX-native.
+
+The paper allocates each (sub-)pipeline dedicated ingress / egress /
+inter-stage rings out of a per-application packet-buffer pool so that
+parallel pipelines never contend on a shared buffer. On TPU the same
+structure is a fixed-capacity device array with monotonic head/tail
+cursors; the SPMD single-writer discipline makes it lock-free by
+construction. Cursors are monotonic int32 and indexed modulo capacity,
+so occupancy is simply ``tail - head``.
+
+Functional style: every operation returns a new Ring (JAX pytree).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+class Ring:
+    """Fixed-capacity FIFO over an arbitrary pytree of row-arrays."""
+
+    def __init__(self, data: Any, head: jnp.ndarray, tail: jnp.ndarray, cap: int):
+        self.data = data      # pytree of (cap, ...) arrays
+        self.head = head      # int32 scalar, monotonic pop cursor
+        self.tail = tail      # int32 scalar, monotonic push cursor
+        self.cap = int(cap)
+
+    # -- pytree plumbing ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.data, self.head, self.tail), self.cap
+
+    @classmethod
+    def tree_unflatten(cls, cap, children):
+        data, head, tail = children
+        return cls(data, head, tail, cap)
+
+    # -- queries -------------------------------------------------------------
+    @property
+    def occupancy(self) -> jnp.ndarray:
+        return self.tail - self.head
+
+    @property
+    def space(self) -> jnp.ndarray:
+        return self.cap - self.occupancy
+
+
+def make_ring(proto: Any, cap: int) -> Ring:
+    """Allocate a ring whose rows match `proto` (a pytree of per-row arrays)."""
+    data = jax.tree.map(lambda a: jnp.zeros((cap,) + tuple(a.shape), a.dtype), proto)
+    return Ring(data, jnp.int32(0), jnp.int32(0), cap)
+
+
+def push(ring: Ring, rows: Any, n: jnp.ndarray | int | None = None) -> Ring:
+    """Append the first `n` rows of `rows` (default: all). Caller must ensure
+    space; on overflow the oldest unread entries are overwritten (the paper's
+    rings are sized by the controller so this does not occur in steady state —
+    tests assert via `space`)."""
+    k = jax.tree.leaves(rows)[0].shape[0]
+    if n is None:
+        n = k
+    idx = (ring.tail + jnp.arange(k, dtype=jnp.int32)) % ring.cap
+    keep = jnp.arange(k) < n
+
+    def upd(buf, new):
+        expand = (slice(None),) + (None,) * (new.ndim - 1)
+        cur = buf[idx]
+        merged = jnp.where(keep[expand], new, cur)
+        return buf.at[idx].set(merged)
+
+    data = jax.tree.map(upd, ring.data, rows)
+    return Ring(data, ring.head, ring.tail + jnp.asarray(n, jnp.int32), ring.cap)
+
+
+def pop(ring: Ring, k: int) -> Tuple[Ring, Any, jnp.ndarray]:
+    """Remove up to `k` rows. Returns (ring, rows, valid_mask); rows beyond the
+    current occupancy are garbage and masked out by `valid_mask`."""
+    avail = ring.occupancy
+    n = jnp.minimum(jnp.int32(k), avail)
+    idx = (ring.head + jnp.arange(k, dtype=jnp.int32)) % ring.cap
+    rows = jax.tree.map(lambda buf: buf[idx], ring.data)
+    valid = jnp.arange(k) < n
+    return Ring(ring.data, ring.head + n, ring.tail, ring.cap), rows, valid
+
+
+def peek(ring: Ring, k: int) -> Tuple[Any, jnp.ndarray]:
+    idx = (ring.head + jnp.arange(k, dtype=jnp.int32)) % ring.cap
+    rows = jax.tree.map(lambda buf: buf[idx], ring.data)
+    valid = jnp.arange(k) < ring.occupancy
+    return rows, valid

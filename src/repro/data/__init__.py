@@ -1,0 +1,2 @@
+from repro.data.pipeline import (SyntheticLMDataset, host_shard_iterator,
+                                 pack_documents)

@@ -1,0 +1,20 @@
+"""Target hardware constants (TPU v5e) + paper-cluster calibration numbers.
+
+All roofline math reads from here so EXPERIMENTS.md, the dry-run driver and
+the controller's profiler agree on one set of constants.
+"""
+
+# --- TPU v5e (the roofline target; container runs CPU) -----------------------
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW_PER_LINK = 50e9         # bytes/s per link (~)
+ICI_LINKS = 4                  # per chip on a 2D torus (v5e: 4 neighbours)
+HBM_PER_CHIP = 16 * 1024**3    # bytes
+
+# --- Meili paper cluster calibration (§8 methodology, Figs 2/9/15) -----------
+# Per-core throughputs (Gbps) used by the testbed cost model; calibrated so
+# single-pipeline app throughputs land in the ranges the paper reports
+# (Fig 9: ~4-9 Gbps per pipeline; TO redirection 100 Gbps at 1500B per core).
+NIC_LINK_GBPS = 100.0
+TO_CORE_GBPS_1500B = 100.0
+PKT_BYTES = 1500

@@ -1,0 +1,64 @@
+"""ARX cipher / keyed-hash rounds — AES & SHA accelerator analogs (Pallas TPU).
+
+BlueField/Pensando crypto engines are opaque fixed-function blocks; what
+matters for Meili is their *throughput shape*: a fixed number of rounds of
+cheap word ops over every payload byte. We reproduce that shape with an
+8-round ARX permutation (add-rotate-xor, VPU-native — TPUs have no AES-NI
+analogue so ARX is the idiomatic substitute) and a keyed fold digest.
+
+Payloads are pre-packed to uint32 words outside the kernel; blocks of
+(block_b, W) words stream through VMEM. Not cryptographically secure — see
+DESIGN.md §2 (structural analog only).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref as _ref
+
+
+def _cipher_kernel(words_ref, key_ref, out_ref):
+    out_ref[...] = _ref.arx_cipher(words_ref[...], key_ref[0])
+
+
+def _hash_kernel(words_ref, key_ref, out_ref):
+    out_ref[...] = _ref.keyed_hash(words_ref[...], key_ref[0])
+
+
+def _call(kernel, words: jnp.ndarray, key: jnp.ndarray, out_w: int,
+          block_b: int, interpret: bool) -> jnp.ndarray:
+    B, W = words.shape
+    block_b = min(block_b, B)
+    assert B % block_b == 0, (B, block_b)
+    return pl.pallas_call(
+        kernel,
+        grid=(B // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, W), lambda i: (i, 0)),
+            pl.BlockSpec((1, 4), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, out_w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, out_w), jnp.uint32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(words.astype(jnp.uint32), key.astype(jnp.uint32)[None, :])
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def arx_cipher(words: jnp.ndarray, key: jnp.ndarray, *, block_b: int = 256,
+               interpret: bool = False) -> jnp.ndarray:
+    """words: (B, W) uint32, key: (4,) uint32 -> (B, W) uint32."""
+    return _call(_cipher_kernel, words, key, words.shape[1], block_b, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def keyed_hash(words: jnp.ndarray, key: jnp.ndarray, *, block_b: int = 256,
+               interpret: bool = False) -> jnp.ndarray:
+    """words: (B, W) uint32, key: (>=4,) uint32 -> (B, 4) uint32 digest."""
+    return _call(_hash_kernel, words, key[:4], 4, block_b, interpret)

@@ -1,0 +1,598 @@
+"""Roofline decomposition: piece-wise lowering with correct multiplicities.
+
+XLA's HloCostAnalysis counts while-loop (lax.scan) bodies ONCE, so the
+full-step dry-run underreports FLOPs/bytes/collective-bytes by the trip
+counts (layer scan × grad-accumulation × CE chunks × flash KV blocks). This
+module lowers each *piece* of the step separately — per-segment layer body
+(fwd+bwd with remat), embed, loss head, optimizer — with internal scans
+unrolled (kernels.ops.set_unroll_scans) so every iteration is counted, then
+combines:
+
+    total = Σ_piece cost(piece) × multiplicity(piece)
+
+Sequence scaling: train/prefill bodies are measured at S₁=1024 and S₂=2048
+and fitted to cost(S) = a·S + b·S² (attention is quadratic, everything else
+linear; the fit recovers both exactly), then evaluated at the target S.
+Decode pieces have no sequence scans and are lowered at the true cache depth
+directly. As a bonus the per-segment costs are exactly the per-stage
+latencies Meili's Algorithm 1 needs (serving/planner.py reuses them).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro import hw
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.kernels import ops as kops
+from repro.launch import roofline as rl
+from repro.launch.steps import choose_microbatch
+from repro.models import encdec as encdec_mod
+from repro.models import lm as lm_mod
+from repro.models.registry import Model
+from repro.parallel.sharding import (default_rules, set_activation_sharding,
+                                     spec_for, tree_specs)
+
+Tree = Any
+S_FIT = (1024, 2048)
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in x)
+
+
+def _strip_layer_dim(struct: Tree, axes: Tree) -> Tuple[Tree, Tree]:
+    s = jax.tree.map(lambda t: jax.ShapeDtypeStruct(t.shape[1:], t.dtype),
+                     struct)
+    a = jax.tree.map(lambda t: t[1:], axes, is_leaf=_is_axes_leaf)
+    return s, a
+
+
+def _shardings(axes: Tree, struct: Tree, rules, mesh) -> Tree:
+    specs = tree_specs(axes, struct, rules, mesh)
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs,
+                        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def _cost_of(fn: Callable, structs: tuple, shardings: tuple, mesh) -> Dict:
+    jitted = jax.jit(fn, in_shardings=shardings)
+    compiled = jitted.lower(*structs).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = rl.collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0) or 0.0),
+            "bytes": float(cost.get("bytes accessed", 0.0) or 0.0),
+            "coll": float(coll["total"]),
+            "coll_by_kind": {k: coll[k] for k in
+                             ("all-reduce", "all-gather", "reduce-scatter",
+                              "all-to-all", "collective-permute")}}
+
+
+def _fit_quadratic(c1: float, c2: float, s1: int, s2: int, s_target: int
+                   ) -> float:
+    """cost(S)=a·S+b·S² through (s1,c1),(s2,c2); clamp b>=0 (noise floor)."""
+    denom = s2 * s2 * s1 - s1 * s1 * s2
+    b = (c2 * s1 - c1 * s2) / denom
+    if b < 0:
+        return c2 / s2 * s_target          # linear through the larger point
+    a = (c1 - b * s1 * s1) / s1
+    return max(0.0, a * s_target + b * s_target * s_target)
+
+
+def _fit_dict(d1: Dict, d2: Dict, s1: int, s2: int, s_target: int) -> Dict:
+    out = {}
+    for k in ("flops", "bytes", "coll"):
+        out[k] = _fit_quadratic(d1[k], d2[k], s1, s2, s_target)
+    out["coll_by_kind"] = {
+        k: _fit_quadratic(d1["coll_by_kind"][k], d2["coll_by_kind"][k],
+                          s1, s2, s_target)
+        for k in d1["coll_by_kind"]}
+    return out
+
+
+def _acc(total: Dict, piece: Dict, mult: float) -> None:
+    for k in ("flops", "bytes", "coll"):
+        total[k] += piece[k] * mult
+    for k, v in piece["coll_by_kind"].items():
+        total["coll_by_kind"][k] = total["coll_by_kind"].get(k, 0.0) + v * mult
+
+
+def _zero() -> Dict:
+    return {"flops": 0.0, "bytes": 0.0, "coll": 0.0, "coll_by_kind": {}}
+
+
+# ---------------------------------------------------------------------------
+# Piece builders (decoder-LM family)
+# ---------------------------------------------------------------------------
+
+def _train_body_fn(cfg, seg, S: int, impl: str = "blocked"):
+    def fn(bp, x, hbar):
+        B = x.shape[0]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+
+        def fwd(bpp, xx):
+            h = xx
+            for i, spec in enumerate(seg.body):
+                h, _ = lm_mod._apply_layer(cfg, spec, bpp[i], h, positions,
+                                           impl)
+            return h
+
+        fwd_c = jax.checkpoint(fwd) if cfg.remat else fwd
+        h, vjp = jax.vjp(fwd_c, bp, x)
+        dp, dx = vjp(hbar)
+        return h, dp, dx
+    return fn
+
+
+def _prefill_body_fn(cfg, seg, S: int, impl: str = "blocked"):
+    def fn(bp, x):
+        B = x.shape[0]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+        h = x
+        kvs = []
+        for i, spec in enumerate(seg.body):
+            h, kv = lm_mod._apply_layer(cfg, spec, bp[i], h, positions, impl,
+                                        collect_kv=True)
+            kvs.append(kv)
+        return h, tuple(kvs)
+    return fn
+
+
+def _decode_body_fn(cfg, seg, impl: str = "blocked"):
+    from repro.models import attention as attn_mod
+    from repro.models import ssm as ssm_mod
+    from repro.models.layers import make_norm, mlp
+    from repro.models import moe as moe_mod
+    _, norm_apply = make_norm(cfg)
+
+    def fn(bp, caches, x, pos):
+        h = x
+        new_cs = []
+        for i, spec in enumerate(seg.body):
+            p, c = bp[i], caches[i]
+            hn = norm_apply(p.get("norm1"), h)
+            if spec.mixer in ("attn", "attn_local"):
+                window = cfg.window if spec.mixer == "attn_local" else None
+                y, ck, cv = attn_mod.attn_decode(p["attn"], hn, cfg,
+                                                 cache_k=c["k"],
+                                                 cache_v=c["v"], pos=pos,
+                                                 window=window, impl=impl)
+                new_cs.append({"k": ck, "v": cv})
+            else:
+                y, nc = ssm_mod.mamba_decode(p["mamba"], hn, c, cfg)
+                new_cs.append(nc)
+            h = h + y
+            if spec.ffn != "none":
+                hn = norm_apply(p.get("norm2"), h)
+                y = mlp(p["mlp"], hn) if spec.ffn == "mlp" else \
+                    moe_mod.moe_ffn(p["moe"], hn[:, None], cfg)[:, 0]
+                h = h + y
+        return h, tuple(new_cs)
+    return fn
+
+
+def _loss_head_fn(cfg, S: int, impl: str = "blocked"):
+    def fn(params_small, x_final, tokens):
+        from repro.models.layers import make_norm
+        _, norm_apply = make_norm(cfg)
+
+        def fwd(ps, xx):
+            emb = ps["embed"]["table"][tokens]          # embed lookup counted
+            xx = xx + 0.0 * emb                          # keep it live
+            xx = norm_apply(ps.get("final_norm"), xx)
+            # chunked CE identical to lm_loss's inner loop
+            w = ps["embed"]["table"].T if cfg.tie_embeddings else \
+                ps["head"]["w"]
+            chunk = min(512, S - 1)
+            n = (S - 1) // chunk
+            xs = xx[:, :n * chunk]
+            tg = tokens[:, 1:1 + n * chunk]
+
+            def step(acc, i):
+                from repro.parallel.sharding import constrain_act
+                xc = jax.lax.dynamic_slice_in_dim(xs, i * chunk, chunk, 1)
+                tc = jax.lax.dynamic_slice_in_dim(tg, i * chunk, chunk, 1)
+                lg = constrain_act((xc @ w).astype(jnp.float32),
+                                   ("loss_batch", "seq", "vocab"))
+                lse = jax.nn.logsumexp(lg, axis=-1)
+                ids = jax.lax.broadcasted_iota(jnp.int32, lg.shape, 2)
+                picked = jnp.sum(jnp.where(ids == tc[..., None], lg, 0.0),
+                                 axis=-1)
+                return acc + jnp.sum(lse - picked), None
+
+            tot, _ = jax.lax.scan(step, jnp.float32(0.0), jnp.arange(n),
+                                  unroll=kops._unroll(n))
+            return tot / xs.shape[0]
+
+        loss, vjp = jax.vjp(fwd, params_small, x_final)
+        dp, dx = vjp(jnp.float32(1.0))
+        return loss, dp, dx
+    return fn
+
+
+def _opt_fn():
+    from repro.optim import adamw_update
+
+    def fn(params, grads, mu, nu):
+        from repro.optim.adamw import AdamWState
+        st = AdamWState(mu=mu, nu=nu, count=jnp.zeros((), jnp.int32))
+        p2, st2, stats = adamw_update(params, grads, st, 1e-4)
+        return p2, st2.mu, st2.nu, stats["grad_norm"]
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Main entry
+# ---------------------------------------------------------------------------
+
+def decompose_cell(model: Model, shape: ShapeConfig, mesh, rules=None,
+                   verbose: bool = False) -> Dict:
+    """Corrected per-device roofline totals for one (arch × shape) cell."""
+    cfg = model.cfg
+    rules = rules or default_rules()
+    set_activation_sharding(rules, mesh)
+    dtype = jnp.bfloat16
+    kops.set_unroll_scans(True)
+    try:
+        if cfg.family == "encdec":
+            totals, pieces = _decompose_encdec(model, shape, mesh, rules,
+                                               dtype)
+        elif shape.kind == "decode":
+            totals, pieces = _decompose_decode(model, shape, mesh, rules,
+                                               dtype)
+        else:
+            totals, pieces = _decompose_lm(model, shape, mesh, rules, dtype)
+    finally:
+        kops.set_unroll_scans(False)
+    total_params, active = model.param_counts()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mflops = rl.model_flops(total_params, active, shape.kind, tokens)
+    roof = rl.Roofline(flops_per_device=totals["flops"],
+                       bytes_per_device=totals["bytes"],
+                       coll_bytes_per_device=totals["coll"],
+                       chips=mesh.size, model_flops=mflops)
+    return {"totals": totals, "pieces": pieces, "roofline": roof.to_dict()}
+
+
+def _seg_param_pieces(model: Model, mesh, rules, dtype):
+    p_struct, p_axes = model.param_struct(dtype)
+    out = []
+    for i in range(len(p_struct["segments"])):
+        seg_struct = p_struct["segments"][i]
+        seg_axes = p_axes["segments"][i]
+        s, a = zip(*[_strip_layer_dim(ss, aa)
+                     for ss, aa in zip(seg_struct, seg_axes)])
+        out.append((tuple(s), tuple(a)))
+    return p_struct, p_axes, out
+
+
+def _decompose_lm(model: Model, shape: ShapeConfig, mesh, rules, dtype):
+    cfg = model.cfg
+    schedule = lm_mod.build_schedule(cfg)
+    accum = choose_microbatch(cfg, shape.global_batch, mesh, rules) \
+        if shape.kind == "train" else 1
+    B = shape.global_batch // accum
+    S = shape.seq_len
+    totals, pieces = _zero(), {}
+    p_struct, p_axes, seg_pieces = _seg_param_pieces(model, mesh, rules, dtype)
+
+    act_axes = ("batch", "seq", None)
+    for i, seg in enumerate(schedule):
+        bp_struct, bp_axes = seg_pieces[i]
+        bp_shard = _shardings(bp_axes, bp_struct, rules, mesh)
+        fits = []
+        for s_m in S_FIT:
+            x_s = jax.ShapeDtypeStruct((B, s_m, cfg.d_model), dtype)
+            x_sh = NamedSharding(mesh, spec_for(act_axes, x_s.shape, rules,
+                                                mesh))
+            if shape.kind == "train":
+                fn = _train_body_fn(cfg, seg, s_m)
+                c = _cost_of(fn, (bp_struct, x_s, x_s),
+                             (bp_shard, x_sh, x_sh), mesh)
+            else:
+                fn = _prefill_body_fn(cfg, seg, s_m)
+                c = _cost_of(fn, (bp_struct, x_s), (bp_shard, x_sh), mesh)
+            fits.append(c)
+        c_t = _fit_dict(fits[0], fits[1], S_FIT[0], S_FIT[1], S)
+        mult = seg.count * accum
+        pieces[f"segment{i}"] = {**c_t, "mult": mult}
+        _acc(totals, c_t, mult)
+
+    # embed + final norm + chunked-CE head (fwd+bwd), fitted over S
+    small_struct = {"embed": p_struct["embed"],
+                    "final_norm": p_struct["final_norm"]}
+    small_axes = {"embed": p_axes["embed"], "final_norm": p_axes["final_norm"]}
+    if not cfg.tie_embeddings:
+        small_struct["head"] = p_struct["head"]
+        small_axes["head"] = p_axes["head"]
+    sp_shard = _shardings(small_axes, small_struct, rules, mesh)
+    fits = []
+    for s_m in S_FIT:
+        x_s = jax.ShapeDtypeStruct((B, s_m, cfg.d_model), dtype)
+        t_s = jax.ShapeDtypeStruct((B, s_m), jnp.int32)
+        x_sh = NamedSharding(mesh, spec_for(act_axes, x_s.shape, rules, mesh))
+        t_sh = NamedSharding(mesh, spec_for(("batch", "seq"), t_s.shape,
+                                            rules, mesh))
+        if shape.kind == "train":
+            fn = _loss_head_fn(cfg, s_m)
+            c = _cost_of(fn, (small_struct, x_s, t_s),
+                         (sp_shard, x_sh, t_sh), mesh)
+        else:
+            def head_fn(ps, x):
+                from repro.models.layers import make_norm
+                _, norm_apply = make_norm(cfg)
+                xx = norm_apply(ps.get("final_norm"), x[:, -1])
+                w = ps["embed"]["table"].T if cfg.tie_embeddings else \
+                    ps["head"]["w"]
+                emb = ps["embed"]["table"][jnp.zeros((x.shape[0], s_m),
+                                                     jnp.int32)]
+                return xx @ w + 0.0 * emb[:, 0, :1]
+            c = _cost_of(head_fn, (small_struct, x_s), (sp_shard, x_sh), mesh)
+        fits.append(c)
+    c_t = _fit_dict(fits[0], fits[1], S_FIT[0], S_FIT[1], S)
+    pieces["embed_loss"] = {**c_t, "mult": accum}
+    _acc(totals, c_t, accum)
+
+    # optimizer (train only): exact, once
+    if shape.kind == "train":
+        g_dtype = jnp.bfloat16 if cfg.bf16_optimizer_state else jnp.float32
+        g_struct = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, g_dtype), p_struct)
+        m_struct = g_struct
+        p_shard = _shardings(p_axes, p_struct, rules, mesh)
+        g_shard = p_shard
+        c = _cost_of(_opt_fn(), (p_struct, g_struct, m_struct, m_struct),
+                     (p_shard, g_shard, g_shard, g_shard), mesh)
+        pieces["optimizer"] = {**c, "mult": 1}
+        _acc(totals, c, 1)
+    return totals, pieces
+
+
+def _decompose_decode(model: Model, shape: ShapeConfig, mesh, rules, dtype):
+    cfg = model.cfg
+    schedule = lm_mod.build_schedule(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    totals, pieces = _zero(), {}
+    p_struct, p_axes, seg_pieces = _seg_param_pieces(model, mesh, rules, dtype)
+    c_struct = jax.eval_shape(lambda: model.init_cache(B, S, dtype)[0])
+    c_axes = model.cache_axes()
+
+    for i, seg in enumerate(schedule):
+        bp_struct, bp_axes = seg_pieces[i]
+        bp_shard = _shardings(bp_axes, bp_struct, rules, mesh)
+        cs, ca = zip(*[_strip_layer_dim(ss, aa)
+                       for ss, aa in zip(c_struct["segments"][i],
+                                         c_axes["segments"][i])])
+        cs, ca = tuple(cs), tuple(ca)
+        c_shard = _shardings(ca, cs, rules, mesh)
+        x_s = jax.ShapeDtypeStruct((B, cfg.d_model), dtype)
+        x_sh = NamedSharding(mesh, spec_for(("batch", None), x_s.shape,
+                                            rules, mesh))
+        pos_s = jax.ShapeDtypeStruct((), jnp.int32)
+        pos_sh = NamedSharding(mesh, PartitionSpec())
+        fn = _decode_body_fn(cfg, seg)
+        c = _cost_of(fn, (bp_struct, cs, x_s, pos_s),
+                     (bp_shard, c_shard, x_sh, pos_sh), mesh)
+        pieces[f"segment{i}"] = {**c, "mult": seg.count}
+        _acc(totals, c, seg.count)
+
+    # embed + head piece (exact)
+    small_struct = {"embed": p_struct["embed"],
+                    "final_norm": p_struct["final_norm"]}
+    small_axes = {"embed": p_axes["embed"], "final_norm": p_axes["final_norm"]}
+    if not cfg.tie_embeddings:
+        small_struct["head"] = p_struct["head"]
+        small_axes["head"] = p_axes["head"]
+    sp_shard = _shardings(small_axes, small_struct, rules, mesh)
+
+    def head_fn(ps, tokens, x):
+        from repro.models.layers import make_norm
+        _, norm_apply = make_norm(cfg)
+        emb = ps["embed"]["table"][tokens]
+        xx = norm_apply(ps.get("final_norm"), x + 0.0 * emb)
+        w = ps["embed"]["table"].T if cfg.tie_embeddings else ps["head"]["w"]
+        return xx @ w
+
+    t_s = jax.ShapeDtypeStruct((B,), jnp.int32)
+    t_sh = NamedSharding(mesh, spec_for(("batch",), (B,), rules, mesh))
+    x_s = jax.ShapeDtypeStruct((B, cfg.d_model), dtype)
+    x_sh = NamedSharding(mesh, spec_for(("batch", None), x_s.shape, rules,
+                                        mesh))
+    c = _cost_of(head_fn, (small_struct, t_s, x_s), (sp_shard, t_sh, x_sh),
+                 mesh)
+    pieces["embed_head"] = {**c, "mult": 1}
+    _acc(totals, c, 1)
+    return totals, pieces
+
+
+def _decompose_encdec(model: Model, shape: ShapeConfig, mesh, rules, dtype):
+    cfg = model.cfg
+    totals, pieces = _zero(), {}
+    p_struct, _ = model.param_struct(dtype)
+    axes = model._axes_tree(dtype)
+    B = shape.global_batch
+    accum = choose_microbatch(cfg, shape.global_batch, mesh, rules) \
+        if shape.kind == "train" else 1
+    B = shape.global_batch // accum
+    act_axes = ("batch", "seq", None)
+
+    enc_s, enc_a = _strip_layer_dim(p_struct["enc"], axes["enc"])
+    dec_s, dec_a = _strip_layer_dim(p_struct["dec"], axes["dec"])
+    enc_sh = _shardings(enc_a, enc_s, rules, mesh)
+    dec_sh = _shardings(dec_a, dec_s, rules, mesh)
+    from repro.models.layers import make_norm, mlp
+    from repro.models import attention as attn_mod
+    _, norm_apply = make_norm(cfg)
+
+    if shape.kind == "decode":
+        S = shape.seq_len
+        c_struct = jax.eval_shape(lambda: model.init_cache(B, S, dtype)[0])
+        ca = model.cache_axes()
+        strip = lambda key: _strip_layer_dim(c_struct[key],
+                                             ca[key])
+        sk_s, sk_a = strip("self_k")
+        ck_s, ck_a = strip("cross_k")
+        sk_sh = NamedSharding(mesh, spec_for(sk_a, sk_s.shape, rules, mesh))
+        ck_sh = NamedSharding(mesh, spec_for(ck_a, ck_s.shape, rules, mesh))
+
+        def dec_body(lp, sk, sv, ck, cv, x, pos):
+            hn = norm_apply(lp.get("norm1"), x)
+            y, sk, sv = attn_mod.attn_decode(lp["self"], hn, cfg, cache_k=sk,
+                                             cache_v=sv, pos=pos)
+            h = x + y
+            hn = norm_apply(lp.get("norm2"), h)
+            y, _, _ = attn_mod.attn_decode(lp["cross"], hn, cfg, cache_k=ck,
+                                           cache_v=cv, pos=pos, cross=True)
+            h = h + y
+            return h + mlp(lp["mlp"], norm_apply(lp.get("norm3"), h)), sk, sv
+
+        x_s = jax.ShapeDtypeStruct((B, cfg.d_model), dtype)
+        x_sh = NamedSharding(mesh, spec_for(("batch", None), x_s.shape,
+                                            rules, mesh))
+        pos_s = jax.ShapeDtypeStruct((), jnp.int32)
+        c = _cost_of(dec_body,
+                     (dec_s, sk_s, sk_s, ck_s, ck_s, x_s, pos_s),
+                     (dec_sh, sk_sh, sk_sh, ck_sh, ck_sh, x_sh,
+                      NamedSharding(mesh, PartitionSpec())), mesh)
+        pieces["dec_body"] = {**c, "mult": cfg.dec_layers}
+        _acc(totals, c, cfg.dec_layers)
+
+        def head_fn(tbl, tokens, x):
+            emb = tbl[tokens]
+            return (x + 0.0 * emb) @ tbl.T
+
+        tbl_s = p_struct["embed"]["table"]
+        tbl_sh = NamedSharding(mesh, spec_for(("vocab", "embed"), tbl_s.shape,
+                                              rules, mesh))
+        t_s = jax.ShapeDtypeStruct((B,), jnp.int32)
+        c = _cost_of(head_fn, (tbl_s, t_s, x_s),
+                     (tbl_sh, NamedSharding(mesh, spec_for(("batch",), (B,),
+                                                           rules, mesh)),
+                      x_sh), mesh)
+        pieces["head"] = {**c, "mult": 1}
+        _acc(totals, c, 1)
+        return totals, pieces
+
+    # train / prefill: enc body + dec body (with cross-attn) fitted over S.
+    S_half = shape.seq_len // 2
+
+    def enc_body(lp, x):
+        def fwd(lpp, xx):
+            B_, S_, _ = xx.shape
+            positions = jnp.broadcast_to(
+                jnp.arange(S_, dtype=jnp.int32)[None], (B_, S_))
+            y = attn_mod.attn_apply(lpp["attn"],
+                                    norm_apply(lpp.get("norm1"), xx), cfg,
+                                    positions=positions, causal=False)
+            h = xx + y
+            return h + mlp(lpp["mlp"], norm_apply(lpp.get("norm2"), h))
+        if shape.kind != "train":
+            return fwd(lp, x)
+        fwd_c = jax.checkpoint(fwd) if cfg.remat else fwd
+        h, vjp = jax.vjp(fwd_c, lp, x)
+        return h, vjp(h)
+
+    def dec_body(lp, x, enc_out):
+        def fwd(lpp, xx, eo):
+            B_, S_, _ = xx.shape
+            positions = jnp.broadcast_to(
+                jnp.arange(S_, dtype=jnp.int32)[None], (B_, S_))
+            y = attn_mod.attn_apply(lpp["self"],
+                                    norm_apply(lpp.get("norm1"), xx), cfg,
+                                    positions=positions, causal=True)
+            h = xx + y
+            y = attn_mod.attn_apply(lpp["cross"],
+                                    norm_apply(lpp.get("norm2"), h), cfg,
+                                    positions=positions, causal=False,
+                                    kv_x=eo)
+            h = h + y
+            return h + mlp(lpp["mlp"], norm_apply(lpp.get("norm3"), h))
+        if shape.kind != "train":
+            return fwd(lp, x, enc_out)
+        fwd_c = jax.checkpoint(fwd) if cfg.remat else fwd
+        h, vjp = jax.vjp(fwd_c, lp, x, enc_out)
+        return h, vjp(h)
+
+    for name, body, params_s, params_sh, n_layers, extra in (
+            ("enc_body", enc_body, enc_s, enc_sh, cfg.enc_layers, False),
+            ("dec_body", dec_body, dec_s, dec_sh, cfg.dec_layers, True)):
+        fits = []
+        for s_m in S_FIT:
+            x_s = jax.ShapeDtypeStruct((B, s_m, cfg.d_model), dtype)
+            x_sh = NamedSharding(mesh, spec_for(act_axes, x_s.shape, rules,
+                                                mesh))
+            if extra:
+                c = _cost_of(body, (params_s, x_s, x_s),
+                             (params_sh, x_sh, x_sh), mesh)
+            else:
+                c = _cost_of(body, (params_s, x_s), (params_sh, x_sh), mesh)
+            fits.append(c)
+        c_t = _fit_dict(fits[0], fits[1], S_FIT[0], S_FIT[1], S_half)
+        pieces[name] = {**c_t, "mult": n_layers * accum}
+        _acc(totals, c_t, n_layers * accum)
+
+    # loss head over decoder positions (train) / last-logits (prefill)
+    tbl_s = p_struct["embed"]["table"]
+    tbl_sh = NamedSharding(mesh, spec_for(("vocab", "embed"), tbl_s.shape,
+                                          rules, mesh))
+    fits = []
+    for s_m in S_FIT:
+        x_s = jax.ShapeDtypeStruct((B, s_m, cfg.d_model), dtype)
+        t_s = jax.ShapeDtypeStruct((B, s_m), jnp.int32)
+        x_sh = NamedSharding(mesh, spec_for(act_axes, x_s.shape, rules, mesh))
+        t_sh = NamedSharding(mesh, spec_for(("batch", "seq"), t_s.shape,
+                                            rules, mesh))
+
+        def loss_fn(tbl, x, tokens, s_m=s_m):
+            def fwd(tb, xx):
+                chunk = min(512, s_m - 1)
+                n = (s_m - 1) // chunk
+                xs = xx[:, :n * chunk]
+                tg = tokens[:, 1:1 + n * chunk]
+
+                def step(acc, i):
+                    from repro.parallel.sharding import constrain_act
+                    xc = jax.lax.dynamic_slice_in_dim(xs, i * chunk, chunk, 1)
+                    tc = jax.lax.dynamic_slice_in_dim(tg, i * chunk, chunk, 1)
+                    lg = constrain_act((xc @ tb.T).astype(jnp.float32),
+                                       ("loss_batch", "seq", "vocab"))
+                    lse = jax.nn.logsumexp(lg, axis=-1)
+                    ids = jax.lax.broadcasted_iota(jnp.int32, lg.shape, 2)
+                    picked = jnp.sum(
+                        jnp.where(ids == tc[..., None], lg, 0.0), axis=-1)
+                    return acc + jnp.sum(lse - picked), None
+
+                tot, _ = jax.lax.scan(step, jnp.float32(0.0), jnp.arange(n),
+                                      unroll=kops._unroll(n))
+                return tot
+
+            if shape.kind != "train":
+                return fwd(tbl, x)
+            loss, vjp = jax.vjp(fwd, tbl, x)
+            return loss, vjp(jnp.float32(1.0))
+
+        c = _cost_of(loss_fn, (tbl_s, x_s, t_s), (tbl_sh, x_sh, t_sh), mesh)
+        fits.append(c)
+    c_t = _fit_dict(fits[0], fits[1], S_FIT[0], S_FIT[1], S_half)
+    pieces["loss"] = {**c_t, "mult": accum}
+    _acc(totals, c_t, accum)
+
+    if shape.kind == "train":
+        p_all, a_all = model.param_struct(dtype)
+        g_struct = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), p_all)
+        p_shard = _shardings(a_all, p_all, rules, mesh)
+        c = _cost_of(_opt_fn(), (p_all, g_struct, g_struct, g_struct),
+                     (p_shard, p_shard, p_shard, p_shard), mesh)
+        pieces["optimizer"] = {**c, "mult": 1}
+        _acc(totals, c, 1)
+    return totals, pieces

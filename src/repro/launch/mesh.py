@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model").
+Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model") — the pod
+axis is pure data parallelism over DCN (params replicated across pods,
+gradients all-reduced; optionally int8-compressed, parallel/compression.py).
+
+A function, not a module-level constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples on CPU)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def dp_degree(mesh) -> int:
+    d = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            d *= mesh.shape[ax]
+    return d

@@ -1,0 +1,91 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun JSON records.
+
+  PYTHONPATH=src python -m repro.launch.report experiments/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 1e9:.2f}"
+
+
+def load(d):
+    recs = {}
+    for f in glob.glob(os.path.join(d, "*.json")):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"], r.get("mesh", "skip"))] = r
+    return recs
+
+
+def dryrun_table(recs, mesh="single"):
+    rows = ["| arch | shape | status | compile s | temp GB/chip | accum | "
+            "HLO GFLOP/dev | coll GB/dev |",
+            "|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(recs.items()):
+        if m == "skip":
+            rows.append(f"| {a} | {s} | SKIP ({r['reason'][:42]}…) | - | - | "
+                        f"- | - | - |")
+            continue
+        if m != mesh:
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {a} | {s} | **FAIL** | - | - | - | - | - |")
+            continue
+        roof = r["roofline"]
+        rows.append(
+            f"| {a} | {s} | ok | {r['compile_s']:.0f} | "
+            f"{fmt_bytes(r['memory']['temp_size_bytes'])} | "
+            f"{r.get('accum', '-')} | {roof['flops_per_device']/1e9:.1f} | "
+            f"{roof['coll_bytes_per_device']/1e9:.2f} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs, mesh="single"):
+    rows = ["| arch | shape | t_comp s | t_mem s | t_coll s | dominant | "
+            "useful | roofline frac | one-line lever |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(recs.items()):
+        if m != mesh or r.get("status") != "ok":
+            continue
+        roof = r["roofline"]
+        lever = _lever(roof, r)
+        rows.append(
+            f"| {a} | {s} | {roof['t_compute']:.3f} | {roof['t_memory']:.3f} "
+            f"| {roof['t_collective']:.3f} | {roof['dominant']} | "
+            f"{roof['useful_flops_ratio']:.3f} | "
+            f"{roof['roofline_fraction']:.4f} | {lever} |")
+    return "\n".join(rows)
+
+
+def _lever(roof, r):
+    d = roof["dominant"]
+    if d == "collective":
+        return ("shrink FSDP all-gathers / overlap collectives with compute "
+                "(Pallas-fused layers need fewer round trips)")
+    if d == "memory":
+        return ("fuse blocked-attention chain on TPU (Pallas keeps the tile "
+                "in VMEM; XLA-counted HLO bytes drop)")
+    return "increase per-chip arithmetic intensity (larger microbatch)"
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    recs = load(d)
+    for mesh in ("single", "multi"):
+        if not any(m == mesh for (_, _, m) in recs):
+            continue
+        print(f"\n### Dry-run — {mesh} pod\n")
+        print(dryrun_table(recs, mesh))
+        print(f"\n### Roofline — {mesh} pod\n")
+        print(roofline_table(recs, mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute term    = HLO_FLOPs / (chips × peak)      [cost_analysis, per device]
+memory term     = HLO_bytes / (chips × HBM_bw)
+collective term = collective_bytes / (chips × link_bw)
+
+cost_analysis() gives per-partition FLOPs/bytes (SPMD module). Collective
+bytes are not in cost_analysis: we parse the *optimized* (post-SPMD) HLO from
+compiled.as_text() and sum operand sizes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (async -start forms counted
+once). Operand shapes are read from the inline types in the op's argument
+list, so the totals are per-device bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[16,4096,128]{2,1,0}
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(.*?)\s"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-category bytes of every collective in the (per-device) optimized
+    HLO. Optimized HLO lists only the RESULT type inline (operands are name
+    references), so sizes are result-shape bytes — exact for all-reduce /
+    all-to-all / collective-permute, the gathered size for all-gather, the
+    scattered size for reduce-scatter. NOTE: collectives inside while (scan)
+    bodies are counted ONCE here; launch/decompose.py applies the trip-count
+    multipliers."""
+    out = {c: 0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _OP_RE.search(stripped)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue  # async completion: counted at -start
+        kind = m.group(2)
+        result_str = m.group(1)
+        nbytes = sum(_shape_bytes(d, s)
+                     for d, s in _SHAPE_RE.findall(result_str))
+        out[kind] += nbytes
+        out["count"] += 1
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    chips: int
+    model_flops: float                 # 6·N·D (train) or 2·N_active·tokens
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / hw.PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / hw.HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / hw.ICI_BW_PER_LINK
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs — catches remat/redundancy waste."""
+        tot = self.flops_per_device * self.chips
+        return self.model_flops / tot if tot else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of chip peak sustained if the step runs at the dominant
+        term's duration: useful model FLOPs / (chips·peak·t_bound)."""
+        denom = self.chips * hw.PEAK_FLOPS_BF16 * self.t_bound
+        return self.model_flops / denom if denom else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(total_params: int, active_params: int, kind: str,
+                tokens: int) -> float:
+    """6·N·D for training; 2·N_active·D forward-only (prefill/decode)."""
+    if kind == "train":
+        return 6.0 * active_params * tokens
+    return 2.0 * active_params * tokens
+
+
+def build(compiled, chips: int, mflops: float) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):          # older API returned [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0) or 0.0)
+    nbytes = float(cost.get("bytes accessed", 0.0) or 0.0)
+    coll = collective_bytes(compiled.as_text())
+    return Roofline(flops_per_device=flops, bytes_per_device=nbytes,
+                    coll_bytes_per_device=float(coll["total"]), chips=chips,
+                    model_flops=mflops)

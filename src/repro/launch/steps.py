@@ -1,0 +1,161 @@
+"""Jittable train / prefill / serve steps with resolved shardings.
+
+`make_train_step` builds the fwd+bwd+AdamW step with gradient-accumulation
+microbatching (count chosen per arch + mesh divisibility); `make_serve_step`
+builds the one-token decode step (cache donated); `make_prefill_step` the
+full-sequence cache build. `build_shardings` resolves every leaf through the
+logical-axis rules so the same code serves the smoke tests (1 CPU device),
+the single-pod (16,16) and the multi-pod (2,16,16) dry-runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch.mesh import dp_degree
+from repro.models.registry import Model
+from repro.optim import adamw_init, adamw_update, make_schedule
+from repro.parallel.sharding import (LogicalRules, batch_dp_degree,
+                                     default_rules, rules_for, spec_for,
+                                     tree_specs)
+
+Tree = Any
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in x)
+
+
+def choose_microbatch(cfg: ArchConfig, global_batch: int, mesh,
+                      rules: Optional[LogicalRules] = None) -> int:
+    """Largest accumulation count <= cfg.microbatch such that the per-step
+    batch still spreads over the full data-parallel degree the rules can
+    reach (dp_heavy archs shard batch over data x model => accum collapses
+    to keep B_step == dp)."""
+    rules = rules or default_rules()
+    dp = batch_dp_degree(rules, mesh, global_batch)
+    for m in range(min(cfg.microbatch, global_batch), 0, -1):
+        if global_batch % m != 0:
+            continue
+        b_step = global_batch // m
+        if b_step % dp == 0:
+            return m
+    return 1
+
+
+def build_shardings(model: Model, mesh, rules: Optional[LogicalRules] = None,
+                    dtype=jnp.bfloat16):
+    """(param ShapeDtypeStructs, param NamedShardings, axes tree)."""
+    rules = rules or default_rules()
+    shapes, axes = model.param_struct(dtype)
+    specs = tree_specs(axes, shapes, rules, mesh)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda x: isinstance(x, PartitionSpec))
+    return shapes, shardings, axes
+
+
+def batch_shardings(model: Model, shape: ShapeConfig, mesh,
+                    rules: Optional[LogicalRules] = None, dtype=jnp.bfloat16):
+    rules = rules or default_rules()
+    specs_sd, in_axes = model.input_specs(shape, dtype)
+    shardings = {
+        k: NamedSharding(mesh, spec_for(in_axes[k], specs_sd[k].shape, rules,
+                                        mesh))
+        for k in specs_sd}
+    return specs_sd, shardings
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+
+def make_train_step(model: Model, shape: ShapeConfig, mesh,
+                    rules: Optional[LogicalRules] = None,
+                    base_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10000):
+    """Returns (train_step, opt_init) — pure functions ready for jax.jit."""
+    cfg = model.cfg
+    rules = rules or default_rules()
+    lr_fn = make_schedule(cfg.schedule, base_lr, warmup, total_steps)
+    accum = choose_microbatch(cfg, shape.global_batch, mesh, rules)
+    grad_dtype = jnp.bfloat16 if cfg.bf16_optimizer_state else jnp.float32
+
+    def train_step(params: Tree, opt_state, batch: Dict[str, jnp.ndarray],
+                   step: jnp.ndarray):
+        def micro_loss(p, mb):
+            return model.loss(p, mb)
+
+        def split(v):
+            return v.reshape((accum, v.shape[0] // accum) + v.shape[1:])
+
+        micro = {k: split(v) for k, v in batch.items()}
+
+        def acc_body(g_acc, mb):
+            loss, g = jax.value_and_grad(micro_loss)(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(grad_dtype), g_acc, g)
+            return g_acc, loss
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, grad_dtype), params)
+        grads, losses = jax.lax.scan(acc_body, g0, micro)
+        grads = jax.tree.map(lambda g: g / accum, grads)
+        lr = lr_fn(step)
+        params, opt_state, stats = adamw_update(params, grads, opt_state, lr)
+        return params, opt_state, losses.mean(), stats["grad_norm"]
+
+    def opt_init(params):
+        return adamw_init(params, jnp.bfloat16 if cfg.bf16_optimizer_state
+                          else jnp.float32)
+
+    train_step.accum = accum  # introspection for logs / EXPERIMENTS.md
+    return train_step, opt_init
+
+
+def opt_state_struct_and_sharding(model: Model, mesh, param_shardings,
+                                  param_shapes, dtype):
+    """Optimizer state mirrors the params tree (mu/nu) + a scalar count."""
+    sdtype = jnp.bfloat16 if model.cfg.bf16_optimizer_state else jnp.float32
+    mu = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, sdtype),
+                      param_shapes)
+    from repro.optim.adamw import AdamWState
+    struct = AdamWState(mu=mu, nu=mu,
+                        count=jax.ShapeDtypeStruct((), jnp.int32))
+    shard = AdamWState(mu=param_shardings, nu=param_shardings,
+                       count=NamedSharding(mesh, PartitionSpec()))
+    return struct, shard
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def make_serve_step(model: Model):
+    def serve_step(params: Tree, cache: Tree, tokens: jnp.ndarray):
+        return model.decode_step(params, cache, tokens)
+    return serve_step
+
+
+def make_prefill_step(model: Model, max_len: int):
+    def prefill_step(params: Tree, batch: Dict[str, jnp.ndarray]):
+        return model.prefill(params, batch, max_len=max_len)
+    return prefill_step
+
+
+def cache_shardings(model: Model, shape: ShapeConfig, mesh,
+                    rules: Optional[LogicalRules] = None,
+                    dtype=jnp.bfloat16):
+    """(cache ShapeDtypeStructs, cache NamedShardings)."""
+    rules = rules or default_rules()
+    B, S = shape.global_batch, shape.seq_len
+    struct = jax.eval_shape(lambda: model.init_cache(B, S, dtype)[0])
+    axes = model.cache_axes()
+    specs = tree_specs(axes, struct, rules, mesh)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda x: isinstance(x, PartitionSpec))
+    return struct, shardings

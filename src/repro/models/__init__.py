@@ -1,0 +1,3 @@
+"""Model substrate: layers, attention, MoE, SSM, schedules, enc-dec, registry."""
+
+from repro.models.registry import Model, build

@@ -1,0 +1,195 @@
+"""Encoder-decoder transformer (seamless-m4t): bidirectional encoder over
+stub audio-frame embeddings + causal decoder with cross-attention.
+
+Encoder and decoder are distinct Meili pipeline stages with different
+latencies — the paper's partial replication applies across them
+(DESIGN.md §4). Sequence budget: a shape cell's seq_len is split evenly
+between encoder frames and decoder tokens for train/prefill; decode keeps a
+seq_len-deep decoder self-attention cache and a fixed 4096-frame encoder.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models.layers import (dense_init, embed_init, make_norm, mlp,
+                                 mlp_init, pad_vocab)
+from repro.parallel.sharding import constrain_act
+
+Tree = Dict
+ENC_LEN_DECODE = 4096
+
+
+def _enc_layer_init(key, cfg, dtype):
+    norm_init, _ = make_norm(cfg)
+    k1, k2 = jax.random.split(key)
+    n1, a1 = norm_init(dtype)
+    n2, a2 = norm_init(dtype)
+    ap, aa = attn_mod.attn_init(k1, cfg, dtype)
+    mp, ma = mlp_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    return ({"norm1": n1, "attn": ap, "norm2": n2, "mlp": mp},
+            {"norm1": a1, "attn": aa, "norm2": a2, "mlp": ma})
+
+
+def _dec_layer_init(key, cfg, dtype):
+    norm_init, _ = make_norm(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p, a = {}, {}
+    for nm in ("norm1", "norm2", "norm3"):
+        p[nm], a[nm] = norm_init(dtype)
+    p["self"], a["self"] = attn_mod.attn_init(k1, cfg, dtype)
+    p["cross"], a["cross"] = attn_mod.attn_init(k2, cfg, dtype, cross=True)
+    p["mlp"], a["mlp"] = mlp_init(k3, cfg.d_model, cfg.d_ff, dtype)
+    return p, a
+
+
+def _stack(key, count, init_fn):
+    keys = jax.random.split(key, count)
+    _, a0 = init_fn(keys[0])
+    stacked = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    is_leaf = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    axes = jax.tree.map(lambda t: ("layers",) + t, a0, is_leaf=is_leaf)
+    return stacked, axes
+
+
+def init_encdec(cfg, key, dtype=jnp.bfloat16) -> Tuple[Tree, Tree]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Tree = {}
+    a: Tree = {}
+    p["embed"], a["embed"] = embed_init(k1, cfg.vocab, cfg.d_model, dtype)
+    p["enc"], a["enc"] = _stack(k2, cfg.enc_layers,
+                                lambda k: _enc_layer_init(k, cfg, dtype))
+    p["dec"], a["dec"] = _stack(k3, cfg.dec_layers,
+                                lambda k: _dec_layer_init(k, cfg, dtype))
+    norm_init, _ = make_norm(cfg)
+    p["enc_norm"], a["enc_norm"] = norm_init(dtype)
+    p["dec_norm"], a["dec_norm"] = norm_init(dtype)
+    return p, a
+
+
+def encode(cfg, params: Tree, frames: jnp.ndarray, impl=None) -> jnp.ndarray:
+    """frames: (B, S_enc, D) stub embeddings -> encoder output."""
+    _, norm_apply = make_norm(cfg)
+    B, S, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(h, lp):
+        y = attn_mod.attn_apply(lp["attn"], norm_apply(lp.get("norm1"), h),
+                                cfg, positions=positions, causal=False,
+                                impl=impl)
+        h = h + y
+        h = h + mlp(lp["mlp"], norm_apply(lp.get("norm2"), h))
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, frames, params["enc"])
+    return norm_apply(params.get("enc_norm"), x)
+
+
+def decode_train(cfg, params: Tree, tokens: jnp.ndarray,
+                 enc_out: jnp.ndarray, impl=None) -> jnp.ndarray:
+    _, norm_apply = make_norm(cfg)
+    x = params["embed"]["table"][tokens]
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(h, lp):
+        y = attn_mod.attn_apply(lp["self"], norm_apply(lp.get("norm1"), h),
+                                cfg, positions=positions, causal=True,
+                                impl=impl)
+        h = h + y
+        y = attn_mod.attn_apply(lp["cross"], norm_apply(lp.get("norm2"), h),
+                                cfg, positions=positions, causal=False,
+                                kv_x=enc_out, impl=impl)
+        h = h + y
+        h = h + mlp(lp["mlp"], norm_apply(lp.get("norm3"), h))
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec"])
+    return norm_apply(params.get("dec_norm"), x)
+
+
+def encdec_loss(cfg, params: Tree, frames: jnp.ndarray, tokens: jnp.ndarray,
+                impl=None, chunk: int = 512) -> jnp.ndarray:
+    enc_out = encode(cfg, params, frames, impl)
+    x = decode_train(cfg, params, tokens, enc_out, impl)
+    xs, tgt = x[:, :-1], tokens[:, 1:]
+    B, S, D = xs.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    xs, tgt = xs[:, :n * chunk], tgt[:, :n * chunk]
+    w = params["embed"]["table"].T
+    vbias = jnp.where(jnp.arange(pad_vocab(cfg.vocab)) < cfg.vocab,
+                      0.0, -1e30).astype(jnp.float32)
+
+    def step(acc, i):
+        xc = jax.lax.dynamic_slice_in_dim(xs, i * chunk, chunk, 1)
+        tc = jax.lax.dynamic_slice_in_dim(tgt, i * chunk, chunk, 1)
+        lg = constrain_act((xc @ w).astype(jnp.float32) + vbias,
+                           ("loss_batch", "seq", "vocab"))
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        ids = jax.lax.broadcasted_iota(jnp.int32, lg.shape, 2)
+        picked = jnp.sum(jnp.where(ids == tc[..., None], lg, 0.0), axis=-1)
+        return acc + jnp.sum(lse - picked), None
+
+    from repro.kernels import ops as _ops
+    total, _ = jax.lax.scan(jax.checkpoint(step), jnp.float32(0.0),
+                            jnp.arange(n), unroll=_ops._unroll(n))
+    return total / (B * n * chunk)
+
+
+# -- decode ---------------------------------------------------------------------
+
+def cache_axes_encdec(cfg) -> Tree:
+    ax = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    return {"pos": (), "self_k": ax, "self_v": ax, "cross_k": ax,
+            "cross_v": ax}
+
+
+def init_cache_encdec(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
+                      enc_len: int = ENC_LEN_DECODE) -> Tuple[Tree, Tree]:
+    L = cfg.dec_layers
+    kself = (L, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    kcross = (L, batch, enc_len, cfg.n_kv_heads, cfg.head_dim)
+    cache = {"pos": jnp.zeros((), jnp.int32),
+             "self_k": jnp.zeros(kself, dtype), "self_v": jnp.zeros(kself, dtype),
+             "cross_k": jnp.zeros(kcross, dtype),
+             "cross_v": jnp.zeros(kcross, dtype)}
+    return cache, cache_axes_encdec(cfg)
+
+
+def decode_step_encdec(cfg, params: Tree, cache: Tree, tokens: jnp.ndarray,
+                       impl=None) -> Tuple[jnp.ndarray, Tree]:
+    """One decoder token against cached self/cross KV."""
+    _, norm_apply = make_norm(cfg)
+    x = params["embed"]["table"][tokens]                       # (B, D)
+    pos = cache["pos"]
+
+    def body(h, xs):
+        lp, sk, sv, ck, cv = xs
+        hn = norm_apply(lp.get("norm1"), h)
+        y, sk, sv = attn_mod.attn_decode(lp["self"], hn, cfg, cache_k=sk,
+                                         cache_v=sv, pos=pos, impl=impl)
+        h = h + y
+        hn = norm_apply(lp.get("norm2"), h)
+        y, _, _ = attn_mod.attn_decode(lp["cross"], hn, cfg, cache_k=ck,
+                                       cache_v=cv, pos=pos, cross=True,
+                                       impl=impl)
+        h = h + y
+        h = h + mlp(lp["mlp"], norm_apply(lp.get("norm3"), h))
+        return h, (sk, sv)
+
+    xs = (params["dec"], cache["self_k"], cache["self_v"], cache["cross_k"],
+          cache["cross_v"])
+    x, (new_sk, new_sv) = jax.lax.scan(body, x, xs)
+    x = norm_apply(params.get("dec_norm"), x)
+    vbias = jnp.where(jnp.arange(pad_vocab(cfg.vocab)) < cfg.vocab,
+                      0.0, -1e30).astype(jnp.float32)
+    lg = (x @ params["embed"]["table"].T).astype(jnp.float32) + vbias
+    new_cache = dict(cache, pos=pos + 1, self_k=new_sk, self_v=new_sv)
+    return lg, new_cache

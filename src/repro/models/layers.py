@@ -1,0 +1,124 @@
+"""Shared model layers: initializers with logical sharding axes, norms, RoPE,
+MLP. Every init returns parallel (params, axes) trees — see
+parallel/sharding.py for how logical names resolve to PartitionSpecs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain_act
+
+Tree = Dict
+
+
+def dense_init(key, in_dim: int, out_dim: int, in_ax: str, out_ax: str,
+               dtype, bias: bool = False, scale: Optional[float] = None
+               ) -> Tuple[Tree, Tree]:
+    s = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    p = {"w": (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * s
+               ).astype(dtype)}
+    a = {"w": (in_ax, out_ax)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+        a["b"] = (out_ax,)
+    return p, a
+
+
+def dense(p: Tree, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(dim: int, dtype) -> Tuple[Tree, Tree]:
+    return {"scale": jnp.ones((dim,), dtype)}, {"scale": ("none",)}
+
+
+def rmsnorm(p: Optional[Tree], x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    if p is not None:
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layernorm_nonparam(x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """OLMo's non-parametric LayerNorm: no scale, no bias."""
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def make_norm(cfg):
+    """Pick the arch's norm (parametric RMS vs OLMo non-parametric LN)."""
+    if cfg.nonparam_ln:
+        return (lambda dtype: ({}, {})), (lambda p, x: layernorm_nonparam(
+            x, cfg.norm_eps))
+    return (lambda dtype: rmsnorm_init(cfg.d_model, dtype)), (
+        lambda p, x: rmsnorm(p, x, cfg.norm_eps))
+
+
+# -- RoPE ---------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: (..., S)."""
+    freqs = rope_freqs(x.shape[-1], theta)                  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                         # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- SwiGLU MLP ----------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype) -> Tuple[Tree, Tree]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    pg, ag = dense_init(k1, d_model, d_ff, "embed", "ff", dtype)
+    pu, au = dense_init(k2, d_model, d_ff, "embed", "ff", dtype)
+    pd, ad = dense_init(k3, d_ff, d_model, "ff", "embed", dtype)
+    return ({"gate": pg, "up": pu, "down": pd},
+            {"gate": ag, "up": au, "down": ad})
+
+
+def mlp(p: Tree, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x)
+    h = constrain_act(h, ("batch", "seq", "ff"))
+    return dense(p["down"], h)
+
+
+# -- Embedding / head -----------------------------------------------------------
+
+def pad_vocab(vocab: int, multiple: int = 256) -> int:
+    """Embedding tables are padded so the vocab dim shards on the model axis
+    (e.g. seamless' 256206 / minicpm's 122753 are not divisible by 16).
+    Pad logits are masked to NEG_INF in the loss/logits paths."""
+    return ((vocab + multiple - 1) // multiple) * multiple
+
+
+def embed_init(key, vocab: int, d_model: int, dtype) -> Tuple[Tree, Tree]:
+    vp = pad_vocab(vocab)
+    p = {"table": (jax.random.normal(key, (vp, d_model), jnp.float32)
+                   * (1.0 / math.sqrt(d_model))).astype(dtype)}
+    return p, {"table": ("vocab", "vocab_embed")}
+
+
+def embed(p: Tree, tokens: jnp.ndarray) -> jnp.ndarray:
+    return p["table"][tokens]
+
+
+def unembed(p: Tree, x: jnp.ndarray, tied: bool) -> jnp.ndarray:
+    w = p["table"].T if tied else p["w"]
+    return x @ w

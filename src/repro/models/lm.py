@@ -1,0 +1,373 @@
+"""Decoder LM over a *layer schedule* — the uniform machinery behind 8 of the
+10 assigned architectures (dense / moe / ssm / hybrid / vlm).
+
+A schedule is a list of Segments; each Segment has a `body` (an ordered tuple
+of LayerSpec — mixer x ffn kinds) repeated `count` times via lax.scan with
+stacked parameters. This keeps HLO size ~O(distinct layer kinds), not
+O(n_layers): jamba's 72 layers compile as ONE scan over 9 copies of an
+8-layer body; gemma3's 5:1 local:global pattern is a 6-layer body x4 plus a
+2-layer tail. Bodies are remat'd (jax.checkpoint) for training.
+
+The paper connection (DESIGN.md §4): each Segment is a Meili pipeline *stage*
+with its own profiled latency; heterogeneous bodies (attention vs mamba vs
+MoE) are exactly the non-uniform stages Algorithm 1 replicates independently.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (dense_init, embed_init, make_norm, mlp,
+                                 mlp_init, pad_vocab, rmsnorm)
+from repro.parallel.sharding import constrain_act
+
+Tree = Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str          # "attn" | "attn_local" | "mamba"
+    ffn: str            # "mlp" | "moe" | "none"
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    body: Tuple[LayerSpec, ...]
+    count: int
+
+
+def build_schedule(cfg) -> List[Segment]:
+    L = cfg.n_layers
+    if cfg.family == "ssm":
+        return [Segment((LayerSpec("mamba", "none"),), L)]
+    if cfg.family == "hybrid":
+        period, body = cfg.attn_period, []
+        for i in range(period):
+            mixer = "attn" if i == period // 2 else "mamba"
+            ffn = "moe" if (i % cfg.moe_period == 1) else "mlp"
+            body.append(LayerSpec(mixer, ffn))
+        assert L % period == 0, (L, period)
+        return [Segment(tuple(body), L // period)]
+    if cfg.family == "moe":
+        segs = []
+        if cfg.first_dense:
+            segs.append(Segment((LayerSpec("attn", "mlp"),), cfg.first_dense))
+        segs.append(Segment((LayerSpec("attn", "moe"),), L - cfg.first_dense))
+        return segs
+    # dense / vlm
+    if cfg.local_global_period:
+        per = cfg.local_global_period
+        body = tuple([LayerSpec("attn_local", "mlp")] * (per - 1)
+                     + [LayerSpec("attn", "mlp")])
+        segs = [Segment(body, L // per)]
+        if L % per:
+            segs.append(Segment((LayerSpec("attn_local", "mlp"),), L % per))
+        return segs
+    return [Segment((LayerSpec("attn", "mlp"),), L)]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg, spec: LayerSpec, dtype) -> Tuple[Tree, Tree]:
+    norm_init, _ = make_norm(cfg)
+    k1, k2 = jax.random.split(key)
+    p: Tree = {}
+    a: Tree = {}
+    np_, na_ = norm_init(dtype)
+    p["norm1"], a["norm1"] = np_, na_
+    if spec.mixer in ("attn", "attn_local"):
+        p["attn"], a["attn"] = attn_mod.attn_init(k1, cfg, dtype)
+    else:
+        p["mamba"], a["mamba"] = ssm_mod.mamba_init(k1, cfg, dtype)
+    if spec.ffn != "none":
+        np2, na2 = norm_init(dtype)
+        p["norm2"], a["norm2"] = np2, na2
+        if spec.ffn == "mlp":
+            p["mlp"], a["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, dtype)
+        else:
+            p["moe"], a["moe"] = moe_mod.moe_init(k2, cfg, dtype)
+    return p, a
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in x)
+
+
+def _stack_init(key, cfg, spec: LayerSpec, count: int, dtype):
+    keys = jax.random.split(key, count)
+    p0, a0 = _layer_init(keys[0], cfg, spec, dtype)
+    stacked = jax.vmap(lambda k: _layer_init(k, cfg, spec, dtype)[0])(keys)
+    axes = jax.tree.map(lambda t: ("layers",) + t, a0, is_leaf=_is_axes_leaf)
+    del p0
+    return stacked, axes
+
+
+def init_lm(cfg, key, dtype=jnp.bfloat16) -> Tuple[Tree, Tree]:
+    schedule = build_schedule(cfg)
+    keys = jax.random.split(key, len(schedule) * 8 + 2)
+    p: Tree = {"segments": []}
+    a: Tree = {"segments": []}
+    ep, ea = embed_init(keys[0], cfg.vocab, cfg.d_model, dtype)
+    p["embed"], a["embed"] = ep, ea
+    if not cfg.tie_embeddings:
+        hp, ha = dense_init(keys[1], cfg.d_model, pad_vocab(cfg.vocab),
+                            "vocab_embed", "vocab", dtype)
+        p["head"], a["head"] = hp, ha
+    ki = 2
+    for seg in schedule:
+        seg_p, seg_a = [], []
+        for pos, spec in enumerate(seg.body):
+            sp, sa = _stack_init(keys[ki], cfg, spec, seg.count, dtype)
+            ki += 1
+            seg_p.append(sp)
+            seg_a.append(sa)
+        p["segments"].append(seg_p)
+        a["segments"].append(seg_a)
+    norm_init, _ = make_norm(cfg)
+    fp, fa = norm_init(dtype)
+    p["final_norm"], a["final_norm"] = fp, fa
+    return p, a
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_layer(cfg, spec: LayerSpec, p: Tree, x, positions, impl,
+                 collect_kv: bool = False):
+    _, norm_apply = make_norm(cfg)
+    h = norm_apply(p.get("norm1"), x)
+    kv = None
+    if spec.mixer in ("attn", "attn_local"):
+        window = cfg.window if spec.mixer == "attn_local" else None
+        out = attn_mod.attn_apply(p["attn"], h, cfg, positions=positions,
+                                  causal=True, window=window, impl=impl,
+                                  return_kv=collect_kv)
+        y, kv = out if collect_kv else (out, None)
+    else:
+        out = ssm_mod.mamba_apply(p["mamba"], h, cfg, impl=impl,
+                                  return_state=collect_kv)
+        y, kv = out if collect_kv else (out, None)
+    x = constrain_act(x + y, ("batch", "seq", None))
+    if spec.ffn != "none":
+        h = norm_apply(p.get("norm2"), x)
+        y = mlp(p["mlp"], h) if spec.ffn == "mlp" else \
+            moe_mod.moe_ffn(p["moe"], h, cfg)
+        x = constrain_act(x + y, ("batch", "seq", None))
+    return x, kv
+
+
+def forward(cfg, params: Tree, tokens: Optional[jnp.ndarray],
+            extra_embeds: Optional[jnp.ndarray] = None,
+            impl: Optional[str] = None) -> jnp.ndarray:
+    """Returns final hidden states (B, S, D). tokens may be None for
+    pure-embedding inputs; extra_embeds (frontend stub) is prepended."""
+    schedule = build_schedule(cfg)
+    parts = []
+    if extra_embeds is not None:
+        parts.append(extra_embeds)
+    if tokens is not None:
+        parts.append(params["embed"]["table"][tokens])
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(
+        [parts[0].astype(parts[1].dtype), parts[1]], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    for seg, seg_p in zip(schedule, params["segments"]):
+        def body(carry, layer_ps, seg=seg):
+            h = carry
+            for pos, spec in enumerate(seg.body):
+                h, _ = _apply_layer(cfg, spec, layer_ps[pos], h, positions,
+                                    impl)
+            return h, None
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, tuple(seg_p))
+    _, norm_apply = make_norm(cfg)
+    return norm_apply(params.get("final_norm"), x)
+
+
+def vocab_bias(cfg, dtype=jnp.float32) -> jnp.ndarray:
+    """(pad_vocab,) additive mask: 0 for real tokens, NEG_INF for padding."""
+    vp = pad_vocab(cfg.vocab)
+    return jnp.where(jnp.arange(vp) < cfg.vocab, 0.0, -1e30).astype(dtype)
+
+
+def logits(cfg, params: Tree, x: jnp.ndarray) -> jnp.ndarray:
+    w = params["embed"]["table"].T if cfg.tie_embeddings else params["head"]["w"]
+    return (x @ w).astype(jnp.float32) + vocab_bias(cfg)
+
+
+def lm_loss(cfg, params: Tree, tokens: jnp.ndarray,
+            extra_embeds: Optional[jnp.ndarray] = None,
+            impl: Optional[str] = None, chunk: int = 512) -> jnp.ndarray:
+    """Next-token CE, computed in sequence chunks so the (S, vocab) logits
+    never materialize (vocab stays sharded; the target pick is a masked
+    reduction, not a gather — GSPMD-friendly)."""
+    x = forward(cfg, params, tokens, extra_embeds, impl)
+    offset = 0 if extra_embeds is None else extra_embeds.shape[1]
+    xs = x[:, offset:offset + tokens.shape[1] - 1]             # predict text
+    tgt = tokens[:, 1:]
+    B, S, D = xs.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    xs, tgt = xs[:, :n * chunk], tgt[:, :n * chunk]
+    w = params["embed"]["table"].T if cfg.tie_embeddings else params["head"]["w"]
+
+    def step(acc, i):
+        xc = jax.lax.dynamic_slice_in_dim(xs, i * chunk, chunk, 1)
+        tc = jax.lax.dynamic_slice_in_dim(tgt, i * chunk, chunk, 1)
+        lg = (xc @ w).astype(jnp.float32)                      # (B, c, V)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        vocab_ids = jax.lax.broadcasted_iota(jnp.int32, lg.shape, 2)
+        picked = jnp.sum(jnp.where(vocab_ids == tc[..., None], lg, 0.0),
+                         axis=-1)
+        return acc + jnp.sum(lse - picked), None
+
+    from repro.kernels import ops as _ops
+    total, _ = jax.lax.scan(step, jnp.float32(0.0), jnp.arange(n),
+                            unroll=_ops._unroll(n))
+    return total / (B * n * chunk)
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step) + cache
+# ---------------------------------------------------------------------------
+
+def cache_axes(cfg) -> Tree:
+    """Logical-axes tree matching init_cache (no allocation)."""
+    schedule = build_schedule(cfg)
+    kv_ax = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    axes: Tree = {"pos": (), "segments": []}
+    for seg in schedule:
+        seg_a = []
+        for spec in seg.body:
+            if spec.mixer in ("attn", "attn_local"):
+                seg_a.append({"k": kv_ax, "v": kv_ax})
+            else:
+                seg_a.append(jax.tree.map(lambda t: ("layers",) + t,
+                                          ssm_mod.mamba_cache_axes(),
+                                          is_leaf=_is_axes_leaf))
+        axes["segments"].append(seg_a)
+    return axes
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16
+               ) -> Tuple[Tree, Tree]:
+    """Stacked per-segment caches (+ parallel logical-axes tree)."""
+    schedule = build_schedule(cfg)
+    cache: Tree = {"pos": jnp.zeros((), jnp.int32), "segments": []}
+    for seg in schedule:
+        seg_c = []
+        for spec in seg.body:
+            if spec.mixer in ("attn", "attn_local"):
+                kshape = (seg.count, batch, max_len, cfg.n_kv_heads,
+                          cfg.head_dim)
+                c = {"k": jnp.zeros(kshape, dtype), "v": jnp.zeros(kshape, dtype)}
+            else:
+                c0 = ssm_mod.mamba_cache_init(cfg, batch, dtype)
+                c = jax.tree.map(
+                    lambda t: jnp.broadcast_to(t[None], (seg.count,) + t.shape),
+                    c0)
+            seg_c.append(c)
+        cache["segments"].append(seg_c)
+    return cache, cache_axes(cfg)
+
+
+def decode_step(cfg, params: Tree, cache: Tree, tokens: jnp.ndarray,
+                impl: Optional[str] = None) -> Tuple[jnp.ndarray, Tree]:
+    """One decode step. tokens: (B,) int32. Returns (logits (B, V), cache)."""
+    schedule = build_schedule(cfg)
+    _, norm_apply = make_norm(cfg)
+    x = params["embed"]["table"][tokens]                        # (B, D)
+    pos = cache["pos"]
+    new_cache: Tree = {"pos": pos + 1, "segments": []}
+
+    for seg, seg_p, seg_c in zip(schedule, params["segments"],
+                                 cache["segments"]):
+        def body(carry, xs, seg=seg):
+            h = carry
+            new_cs = []
+            for i, spec in enumerate(seg.body):
+                p, c = xs[2 * i], xs[2 * i + 1]
+                hn = norm_apply(p.get("norm1"), h)
+                if spec.mixer in ("attn", "attn_local"):
+                    window = cfg.window if spec.mixer == "attn_local" else None
+                    y, ck, cv = attn_mod.attn_decode(
+                        p["attn"], hn, cfg, cache_k=c["k"], cache_v=c["v"],
+                        pos=pos, window=window, impl=impl)
+                    new_cs.append({"k": ck, "v": cv})
+                else:
+                    y, nc = ssm_mod.mamba_decode(p["mamba"], hn, c, cfg)
+                    new_cs.append(nc)
+                h = h + y
+                if spec.ffn != "none":
+                    hn = norm_apply(p.get("norm2"), h)
+                    y = mlp(p["mlp"], hn) if spec.ffn == "mlp" else \
+                        moe_mod.moe_ffn(p["moe"], hn[:, None], cfg)[:, 0]
+                    h = h + y
+            return h, tuple(new_cs)
+
+        xs = tuple(v for pair in zip(seg_p, seg_c) for v in pair)
+        x, updated = jax.lax.scan(body, x, xs)
+        new_cache["segments"].append(list(updated))
+    x = norm_apply(params.get("final_norm"), x)
+    lg = logits(cfg, params, x)
+    return lg, new_cache
+
+
+def prefill(cfg, params: Tree, tokens: Optional[jnp.ndarray],
+            extra_embeds: Optional[jnp.ndarray] = None, max_len: int = 0,
+            impl: Optional[str] = None, cache_dtype=jnp.bfloat16):
+    """Full-sequence forward that also fills a decode cache.
+
+    Note: forward() is re-run per segment with KV collection — implemented as
+    one pass that emits (k, v) via scan ys.
+    """
+    schedule = build_schedule(cfg)
+    parts = []
+    if extra_embeds is not None:
+        parts.append(extra_embeds)
+    if tokens is not None:
+        parts.append(params["embed"]["table"][tokens])
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(
+        [parts[0].astype(parts[1].dtype), parts[1]], axis=1)
+    B, S, _ = x.shape
+    max_len = max_len or S
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    cache: Tree = {"pos": jnp.int32(S), "segments": []}
+
+    for seg, seg_p in zip(schedule, params["segments"]):
+        def body(carry, layer_ps, seg=seg):
+            h = carry
+            kvs = []
+            for pos_i, spec in enumerate(seg.body):
+                h, kv = _apply_layer(cfg, spec, layer_ps[pos_i], h, positions,
+                                     impl, collect_kv=True)
+                if spec.mixer in ("attn", "attn_local"):
+                    k, v = kv
+                    pad = max_len - S
+                    k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    kvs.append({"k": k.astype(cache_dtype),
+                                "v": v.astype(cache_dtype)})
+                else:
+                    kvs.append(jax.tree.map(
+                        lambda t: t.astype(cache_dtype)
+                        if t.dtype != jnp.float32 else t, kv))
+            return h, tuple(kvs)
+
+        x, kv_stacks = jax.lax.scan(body, x, tuple(seg_p))
+        cache["segments"].append(list(kv_stacks))
+    _, norm_apply = make_norm(cfg)
+    x = norm_apply(params.get("final_norm"), x)
+    return logits(cfg, params, x[:, -1]), cache

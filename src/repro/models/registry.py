@@ -1,0 +1,175 @@
+"""Uniform model facade over all 10 assigned architectures.
+
+`build(cfg)` returns a Model exposing:
+  init / param_struct (eval_shape — no allocation, dry-run safe),
+  loss (training), prefill, decode_step, init_cache,
+  input_specs(shape) -> ShapeDtypeStruct dict + logical input axes,
+  param counts (total & active) for MODEL_FLOPS.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec as encdec_mod
+from repro.models import lm as lm_mod
+
+Tree = Dict
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in x)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+
+    # -- params ---------------------------------------------------------------
+    def init(self, key, dtype=jnp.bfloat16) -> Tuple[Tree, Tree]:
+        if self.cfg.family == "encdec":
+            return encdec_mod.init_encdec(self.cfg, key, dtype)
+        return lm_mod.init_lm(self.cfg, key, dtype)
+
+    def param_struct(self, dtype=jnp.bfloat16) -> Tuple[Tree, Tree]:
+        """Shapes/axes without allocating (dry-run path for 398B params)."""
+        key = jax.random.PRNGKey(0)
+        shapes = jax.eval_shape(lambda: self.init(key, dtype)[0])
+        return shapes, self._axes_tree(dtype)
+
+    def _axes_tree(self, dtype=jnp.bfloat16) -> Tree:
+        # The axes tree depends only on the model STRUCTURE (schedule,
+        # branches), never on dim sizes — build it from a tiny config that
+        # preserves n_layers / periods exactly so the tree shape matches.
+        cfg = self.cfg
+        tiny = cfg.replace(
+            d_model=16, d_ff=16 if cfg.d_ff else 0, vocab=32,
+            n_heads=2 if cfg.n_heads else 0,
+            n_kv_heads=1 if cfg.n_kv_heads else 0,
+            d_head=8 if cfg.n_heads else 0,
+            n_experts=2 if cfg.n_experts else 0,
+            top_k=1 if cfg.top_k else 0,
+            ssm_state=4 if cfg.ssm_state else 0,
+            ssm_head_dim=8 if cfg.ssm_head_dim else 0)
+        key = jax.random.PRNGKey(0)
+        if cfg.family == "encdec":
+            _, axes = encdec_mod.init_encdec(tiny, key, jnp.float32)
+        else:
+            _, axes = lm_mod.init_lm(tiny, key, jnp.float32)
+        return axes
+
+    def param_counts(self) -> Tuple[int, int]:
+        """(total, active) parameter counts. Active discounts non-routed
+        experts by top_k/n_experts (MoE MODEL_FLOPS uses 6·N_active·D)."""
+        shapes, axes = self.param_struct()
+        leaves_s = jax.tree.leaves(shapes)
+        leaves_a = jax.tree.leaves(axes, is_leaf=_is_axes_leaf)
+        total = active = 0
+        for s, a in zip(leaves_s, leaves_a):
+            n = int(np.prod(s.shape))
+            total += n
+            if "experts" in a and self.cfg.n_experts:
+                active += n * self.cfg.top_k // self.cfg.n_experts
+            else:
+                active += n
+        return total, active
+
+    # -- steps ------------------------------------------------------------------
+    def loss(self, params: Tree, batch: Dict[str, jnp.ndarray],
+             impl: Optional[str] = None) -> jnp.ndarray:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return encdec_mod.encdec_loss(cfg, params, batch["frames"],
+                                          batch["tokens"], impl=impl)
+        extra = batch.get("patches")
+        return lm_mod.lm_loss(cfg, params, batch["tokens"], extra, impl=impl)
+
+    def forward(self, params: Tree, batch: Dict[str, jnp.ndarray],
+                impl: Optional[str] = None) -> jnp.ndarray:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            enc = encdec_mod.encode(cfg, params, batch["frames"], impl)
+            return encdec_mod.decode_train(cfg, params, batch["tokens"], enc,
+                                           impl)
+        return lm_mod.forward(cfg, params, batch.get("tokens"),
+                              batch.get("patches"), impl)
+
+    def prefill(self, params: Tree, batch: Dict[str, jnp.ndarray],
+                max_len: int = 0, impl: Optional[str] = None,
+                cache_dtype=jnp.bfloat16):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            enc = encdec_mod.encode(cfg, params, batch["frames"], impl)
+            # cross-attn KV computed once here (real serving would cache it);
+            # baseline reports prefill = encoder + decoder-prefill cost.
+            x = encdec_mod.decode_train(cfg, params, batch["tokens"], enc,
+                                        impl)
+            from repro.models.layers import pad_vocab
+            vbias = jnp.where(jnp.arange(pad_vocab(cfg.vocab)) < cfg.vocab,
+                              0.0, -1e30).astype(jnp.float32)
+            lg = (x[:, -1] @ params["embed"]["table"].T).astype(jnp.float32)
+            return lg + vbias, None
+        return lm_mod.prefill(cfg, params, batch.get("tokens"),
+                              batch.get("patches"), max_len=max_len, impl=impl,
+                              cache_dtype=cache_dtype)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        if self.cfg.family == "encdec":
+            return encdec_mod.init_cache_encdec(self.cfg, batch, max_len,
+                                                dtype)
+        return lm_mod.init_cache(self.cfg, batch, max_len, dtype)
+
+    def decode_step(self, params: Tree, cache: Tree, tokens: jnp.ndarray,
+                    impl: Optional[str] = None):
+        if self.cfg.family == "encdec":
+            return encdec_mod.decode_step_encdec(self.cfg, params, cache,
+                                                 tokens, impl=impl)
+        return lm_mod.decode_step(self.cfg, params, cache, tokens, impl=impl)
+
+    # -- input specs -----------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig, dtype=jnp.bfloat16
+                    ) -> Tuple[Dict[str, jax.ShapeDtypeStruct], Dict[str, tuple]]:
+        """ShapeDtypeStruct stand-ins + logical axes for every model input."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind in ("train", "prefill"):
+            if cfg.family == "encdec":
+                half = S // 2
+                return ({"frames": jax.ShapeDtypeStruct((B, half, cfg.d_model),
+                                                         dtype),
+                         "tokens": jax.ShapeDtypeStruct((B, half), jnp.int32)},
+                        {"frames": ("batch", "seq", "embed_act"),
+                         "tokens": ("batch", "seq")})
+            if cfg.family == "vlm":
+                tv = cfg.frontend_tokens
+                return ({"patches": jax.ShapeDtypeStruct((B, tv, cfg.d_model),
+                                                         dtype),
+                         "tokens": jax.ShapeDtypeStruct((B, S - tv), jnp.int32)},
+                        {"patches": ("batch", "seq", "embed_act"),
+                         "tokens": ("batch", "seq")})
+            return ({"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)},
+                    {"tokens": ("batch", "seq")})
+        # decode: one new token against a seq_len cache
+        return ({"tokens": jax.ShapeDtypeStruct((B,), jnp.int32)},
+                {"tokens": ("batch",)})
+
+    def cache_struct(self, shape: ShapeConfig, dtype=jnp.bfloat16):
+        """(ShapeDtypeStruct cache, axes) for decode dry-runs (no alloc)."""
+        B, S = shape.global_batch, shape.seq_len
+        struct = jax.eval_shape(lambda: self.init_cache(B, S, dtype)[0])
+        return struct, self.cache_axes()
+
+    def cache_axes(self):
+        if self.cfg.family == "encdec":
+            return encdec_mod.cache_axes_encdec(self.cfg)
+        return lm_mod.cache_axes(self.cfg)
+
+
+def build(cfg: ArchConfig) -> Model:
+    return Model(cfg)

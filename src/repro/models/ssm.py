@@ -1,0 +1,152 @@
+"""Mamba-2 block: projections, causal depthwise conv, SSD scan, gating.
+
+Structure (simplified but standard Mamba-2): separate projections for z
+(gate), x (inner), B, C (state projections, single group) and dt (per head);
+causal depthwise conv over the x/B/C paths; a_t = exp(-softplus(A_log)·dt);
+SSD scan via kernels/ops.ssd; RMS-normed gated output projection.
+
+Decode carries (conv tail, ssm state h) per layer.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+from repro.parallel.sharding import constrain_act
+
+Tree = Dict
+
+
+def mamba_init(key, cfg, dtype) -> Tuple[Tree, Tree]:
+    D, Din, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    K = cfg.conv_kernel
+    ks = jax.random.split(key, 8)
+    pz, az = dense_init(ks[0], D, Din, "embed", "ff", dtype)
+    px, ax = dense_init(ks[1], D, Din, "embed", "ff", dtype)
+    pB, aB = dense_init(ks[2], D, N, "embed", "state", dtype)
+    pC, aC = dense_init(ks[3], D, N, "embed", "state", dtype)
+    pdt, adt = dense_init(ks[4], D, H, "embed", "none", dtype)
+    po, ao = dense_init(ks[5], Din, D, "ff", "embed", dtype)
+    pn, an = rmsnorm_init(Din, dtype)
+    p = {
+        "z": pz, "x": px, "B": pB, "C": pC, "dt": pdt, "o": po, "norm": pn,
+        "conv_x": (jax.random.normal(ks[6], (K, Din), jnp.float32)
+                   * (1.0 / math.sqrt(K))).astype(dtype),
+        "conv_BC": (jax.random.normal(ks[7], (K, 2 * N), jnp.float32)
+                    * (1.0 / math.sqrt(K))).astype(dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+    }
+    a = {
+        "z": az, "x": ax, "B": aB, "C": aC, "dt": adt, "o": ao, "norm": an,
+        "conv_x": ("conv", "ff"), "conv_BC": ("conv", "none"),
+        "A_log": ("none",), "dt_bias": ("none",), "D_skip": ("none",),
+    }
+    return p, a
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x: (B, S, Ch), w: (K, Ch)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):
+        out = out + pad[:, i:i + x.shape[1], :].astype(jnp.float32) * \
+            w[i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _gates(p: Tree, xw: jnp.ndarray, cfg):
+    """Common path: dt/a from the dt projection. xw: (B,S,D) block input."""
+    dt = (xw @ p["dt"]["w"]).astype(jnp.float32) + p["dt_bias"]
+    dt = jax.nn.softplus(dt)                                   # (B,S,H)
+    a = jnp.exp(-jnp.exp(p["A_log"])[None, None, :] * dt)      # (B,S,H) in (0,1)
+    return dt, a
+
+
+def mamba_apply(p: Tree, xw: jnp.ndarray, cfg, impl=None,
+                return_state: bool = False):
+    """xw: (B, S, D) (already normed) -> (B, S, D) [, decode cache]."""
+    B, S, D = xw.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = constrain_act(xw @ p["z"]["w"], ("batch", "seq", "ff"))  # (B,S,Din)
+    xi_pre = constrain_act(xw @ p["x"]["w"], ("batch", "seq", "ff"))
+    xi = jax.nn.silu(_causal_conv(xi_pre, p["conv_x"]))
+    bc_pre = jnp.concatenate([xw @ p["B"]["w"], xw @ p["C"]["w"]], axis=-1)
+    bc = jax.nn.silu(_causal_conv(bc_pre, p["conv_BC"]))
+    Bm, Cm = jnp.split(bc, 2, axis=-1)                         # (B,S,N) each
+    dt, a = _gates(p, xw, cfg)
+    xh = xi.reshape(B, S, H, P)
+    b = Bm[:, :, None, :] * dt[..., None]                      # (B,S,H,N)
+    c = jnp.broadcast_to(Cm[:, :, None, :], (B, S, H, N))
+    y, h_fin = ops.ssd(xh, a, b, c, impl=impl)
+    y = y + p["D_skip"][None, None, :, None] * xh
+    y = y.reshape(B, S, H * P)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = constrain_act((y.astype(xw.dtype) @ p["o"]["w"]).astype(xw.dtype),
+                        ("batch", "seq", None))
+    if return_state:
+        K = cfg.conv_kernel
+        cache = {"conv_x": xi_pre[:, S - (K - 1):, :],
+                 "conv_BC": bc_pre[:, S - (K - 1):, :],
+                 "h": h_fin}
+        return out, cache
+    return out
+
+
+def mamba_cache_init(cfg, batch: int, dtype):
+    """Per-layer decode cache: conv tails + ssm state."""
+    K = cfg.conv_kernel
+    return {
+        "conv_x": jnp.zeros((batch, K - 1, cfg.d_inner), dtype),
+        "conv_BC": jnp.zeros((batch, K - 1, 2 * cfg.ssm_state), dtype),
+        "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                        cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+def mamba_cache_axes():
+    return {
+        "conv_x": ("batch", "conv", "ff"),
+        "conv_BC": ("batch", "conv", "none"),
+        "h": ("batch", "none", "cache_state", "none"),
+    }
+
+
+def mamba_decode(p: Tree, xw: jnp.ndarray, cache: Tree, cfg):
+    """One-token step. xw: (B, D) normed input. Returns (y (B,D), cache)."""
+    B, D = xw.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = xw @ p["z"]["w"]
+    xi_new = xw @ p["x"]["w"]                                  # (B,Din)
+    bc_new = jnp.concatenate([xw @ p["B"]["w"], xw @ p["C"]["w"]], axis=-1)
+
+    def conv_step(tail, new, w):
+        full = jnp.concatenate([tail, new[:, None, :]], axis=1)  # (B,K,Ch)
+        out = (full.astype(jnp.float32) *
+               w[None].astype(jnp.float32)).sum(axis=1)
+        return full[:, 1:, :], out.astype(new.dtype)
+
+    tail_x, xi = conv_step(cache["conv_x"], xi_new, p["conv_x"])
+    tail_bc, bc = conv_step(cache["conv_BC"], bc_new, p["conv_BC"])
+    xi = jax.nn.silu(xi)
+    bc = jax.nn.silu(bc)
+    Bm, Cm = jnp.split(bc, 2, axis=-1)                         # (B,N)
+    dt = jax.nn.softplus((xw @ p["dt"]["w"]).astype(jnp.float32) + p["dt_bias"])
+    a = jnp.exp(-jnp.exp(p["A_log"])[None, :] * dt)            # (B,H)
+    xh = xi.reshape(B, H, P).astype(jnp.float32)
+    b = Bm[:, None, :].astype(jnp.float32) * dt[..., None]     # (B,H,N)
+    h = a[..., None, None] * cache["h"] + \
+        b[..., :, None] * xh[..., None, :]                     # (B,H,N,P)
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), h)
+    y = y + p["D_skip"][None, :, None] * xh
+    y = y.reshape(B, H * P).astype(xw.dtype)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    new_cache = {"conv_x": tail_x, "conv_BC": tail_bc, "h": h}
+    return y @ p["o"]["w"], new_cache

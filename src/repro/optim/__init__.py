@@ -1,0 +1,3 @@
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               clip_by_global_norm)
+from repro.optim.schedules import cosine_schedule, wsd_schedule, make_schedule

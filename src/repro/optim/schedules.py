@@ -1,0 +1,38 @@
+"""LR schedules: cosine and MiniCPM's WSD (warmup-stable-decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def wsd_schedule(base_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1, floor: float = 0.1):
+    """MiniCPM WSD: linear warmup -> constant plateau -> short exponential-ish
+    decay over the last `decay_frac` of training to `floor`·base_lr."""
+    decay_start = int(total * (1.0 - decay_frac))
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - decay_start) / max(total - decay_start, 1),
+                        0.0, 1.0)
+        decay = base_lr * (floor ** prog)
+        out = jnp.where(step < warmup, warm,
+                        jnp.where(step < decay_start, base_lr, decay))
+        return out
+    return lr
+
+
+def make_schedule(kind: str, base_lr: float, warmup: int, total: int):
+    if kind == "wsd":
+        return wsd_schedule(base_lr, warmup, total)
+    return cosine_schedule(base_lr, warmup, total)

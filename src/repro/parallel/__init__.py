@@ -1,0 +1,5 @@
+"""Distribution substrate: logical-axis sharding rules, mesh utilities,
+collective helpers, gradient compression."""
+
+from repro.parallel.sharding import (LogicalRules, default_rules, spec_for,
+                                     tree_specs, shardings_for, constrain)

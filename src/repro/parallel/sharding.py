@@ -1,0 +1,208 @@
+"""Logical-axis sharding resolver (MaxText-style logical axis rules).
+
+Every parameter/activation carries a tuple of *logical* dim names (its "axes
+tree", built in parallel with the params tree at init). A rule table maps
+each logical name to an ordered list of mesh-axis candidates; the resolver
+assigns the first candidate whose size divides the dimension and whose mesh
+axes are not already used by another dim of the same tensor. This gives:
+
+  * automatic fallbacks (e.g. heads -> head_dim tensor parallelism when the
+    head count does not divide the model axis — minicpm's 36 heads on a
+    16-way axis),
+  * per-experiment overrides (the §Perf hillclimb swaps rule tables, not
+    model code),
+  * safe behaviour on any mesh (axes absent from the mesh are skipped).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# A rule: logical name -> ordered candidates; each candidate is a tuple of
+# mesh axes used together on that dim (e.g. ("pod", "data") for global batch).
+LogicalRules = Dict[str, List[Tuple[str, ...]]]
+
+
+def dp_heavy_rules() -> LogicalRules:
+    """Fully-sharded data parallelism (ZeRO-3 style) for archs whose head
+    counts do not divide the model axis (minicpm 36H, qwen 40H, llava 56H,
+    gemma3 4H): the batch spreads over data x model (with graceful fallback
+    when the per-step batch is smaller), weights shard over ('data','model')
+    on their embed dim and are all-gathered at use. Attention runs fully
+    batch-parallel — no replicated compute, no contraction-dim psums."""
+    return {
+        "batch": [("pod", "data", "model"), ("data", "model"),
+                  ("pod", "data"), ("data",)],
+        # sequence parallelism: when the batch cannot cover data x model
+        # (prefill B=32), activations shard their seq dim on the idle model
+        # axis instead of replicating 16x (K/V gathered per layer).
+        "seq": [("model",)],
+        "kv_seq": [("model",)],
+        "embed": [("data", "model"), ("data",)],
+        "vocab": [("model",)],
+        "heads": [],
+        "head_dim": [],
+        "kv_heads": [],
+        "ff": [],
+        "experts": [("model",)],
+        "expert_ff": [],
+        "state": [], "conv": [], "layers": [], "frames": [],
+        "capacity": [("data",)], "moe_tokens": [("data",)],
+        "vocab_embed": [],          # embed-table model dim: replicated
+        "loss_batch": [("data", "model"), ("data",)],
+        "cache_state": [("model",)],  # SSM decode state N dim
+        "none": [],
+    }
+
+
+def rules_for(cfg, mesh, fsdp: bool = True) -> LogicalRules:
+    """Pick the baseline rule table for an arch on this mesh.
+
+    * heads AND kv_heads divide the model axis -> full TP (default rules).
+    * only kv_heads indivisible (jamba/phi: Hq=64/32, Hkv=8 on a 16-way
+      axis) -> the GQA (Hkv, G) reshape cannot stay sharded (measured:
+      superquadratic GSPMD reshard blow-up), so attention runs
+      batch-parallel while MLP/MoE keep model-axis TP.
+    * heads indivisible (minicpm/qwen/llava/gemma3) -> fully-sharded DP.
+    """
+    model_size = dict(mesh.shape).get("model", 1)
+    if cfg.n_heads and cfg.n_heads % model_size != 0:
+        return dp_heavy_rules()
+    if cfg.n_kv_heads and cfg.n_kv_heads % model_size != 0:
+        rules = default_rules(fsdp)
+        rules["heads"] = []
+        rules["kv_heads"] = []
+        rules["seq"] = [("model",)]   # sequence-parallel attention activations
+        return rules
+    return default_rules(fsdp)
+
+
+def batch_dp_degree(rules: LogicalRules, mesh, global_batch: int) -> int:
+    """Data-parallel degree the 'batch' rule will actually achieve for this
+    global batch (first candidate whose size divides it)."""
+    for cand in rules.get("batch", []):
+        cand = tuple(a for a in cand if a in mesh.axis_names)
+        if not cand:
+            continue
+        size = int(np.prod([dict(mesh.shape)[a] for a in cand]))
+        if size and global_batch % size == 0:
+            return size
+    return 1
+
+
+def default_rules(fsdp: bool = True) -> LogicalRules:
+    """Baseline rule table: DP(+pod) on batch, TP on model, FSDP on embed."""
+    return {
+        "batch": [("pod", "data"), ("data",)],
+        "seq": [],
+        "kv_seq": [("model",)],          # decode caches: depth-shard fallback
+        "embed": [("data",)] if fsdp else [],
+        "vocab": [("model",)],
+        "heads": [("model",)],
+        # NOTE: no head_dim fallback by default — contraction-dim TP makes
+        # every blocked-attention logits tile a cross-model psum (measured
+        # ~128 s collective term on minicpm train_4k). Heads-indivisible
+        # archs run attention batch-parallel with FSDP'd weights instead;
+        # §Perf revisits with sequence-parallel attention.
+        "head_dim": [],
+        "kv_heads": [("model",)],
+        "ff": [("model",)],
+        "experts": [("model",)],
+        "expert_ff": [],
+        "state": [],
+        "conv": [],
+        "layers": [],
+        "frames": [],
+        "capacity": [("data",)],   # MoE (E,C,D) buffers: C over data
+        "moe_tokens": [("data",)],
+        "vocab_embed": [],         # embed-table model dim: replicated (small)
+        "loss_batch": [("data",)], # CE logits: batch on data so vocab->model
+        "cache_state": [("model",)],  # SSM decode state N dim
+        "none": [],
+    }
+
+
+# Dims are assigned mesh axes in priority order, so e.g. `kv_heads` gets the
+# model axis before the `kv_seq` fallback competes for it.
+_PRIORITY = {
+    "batch": 0, "loss_batch": 0, "experts": 1, "vocab": 1, "ff": 1,
+    "heads": 1, "kv_heads": 1, "embed": 2, "head_dim": 3, "kv_seq": 4,
+    "moe_tokens": 4,
+}
+
+
+def spec_for(axes: Sequence[Optional[str]], shape: Sequence[int],
+             rules: LogicalRules, mesh: Mesh) -> PartitionSpec:
+    """Resolve one tensor's PartitionSpec from its logical axes."""
+    assert len(axes) == len(shape), (axes, shape)
+    used: set = set()
+    out: List = [None] * len(axes)
+    order = sorted(range(len(axes)),
+                   key=lambda i: _PRIORITY.get(axes[i] or "none", 9))
+    for i in order:
+        name, dim = axes[i], shape[i]
+        for cand in rules.get(name or "none", []):
+            cand = tuple(a for a in cand if a in mesh.axis_names)
+            if not cand or any(a in used for a in cand):
+                continue
+            size = int(np.prod([mesh.shape[a] for a in cand]))
+            if size > 0 and dim % size == 0:
+                out[i] = cand if len(cand) > 1 else cand[0]
+                used.update(cand)
+                break
+    return PartitionSpec(*out)
+
+
+def tree_specs(axes_tree, params_tree, rules: LogicalRules, mesh: Mesh):
+    """Map parallel (params, axes) trees -> tree of PartitionSpec."""
+    return jax.tree.map(
+        lambda a, p: spec_for(a, p.shape, rules, mesh),
+        axes_tree, params_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def shardings_for(axes_tree, params_tree, rules: LogicalRules, mesh: Mesh):
+    specs = tree_specs(axes_tree, params_tree, rules, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def constrain(x, axes: Sequence[Optional[str]], rules: LogicalRules,
+              mesh: Optional[Mesh]) -> jax.Array:
+    """with_sharding_constraint by logical names (no-op without a mesh)."""
+    if mesh is None or mesh.empty:
+        return x
+    spec = spec_for(axes, x.shape, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding context: model code calls constrain_act(x, axes) with
+# logical names; the launcher installs (rules, mesh) before tracing. Without
+# explicit constraints GSPMD may resolve the FSDP-weight/batch-activation
+# conflict by REPLICATING activations across the data axis (measured: 16x
+# activation blow-up on heads-indivisible archs). No-op when not installed
+# (host tests / single device).
+# ---------------------------------------------------------------------------
+
+_ACT = {"rules": None, "mesh": None}
+
+
+def set_activation_sharding(rules: Optional[LogicalRules],
+                            mesh: Optional[Mesh]) -> None:
+    _ACT["rules"], _ACT["mesh"] = rules, mesh
+
+
+def constrain_act(x, axes: Sequence[Optional[str]]):
+    rules, mesh = _ACT["rules"], _ACT["mesh"]
+    if rules is None or mesh is None:
+        return x
+    if len(axes) != x.ndim:
+        # shared layer code runs at several ranks (decode drops the seq dim);
+        # constraints are best-effort hints — skip on rank mismatch.
+        return x
+    return constrain(x, axes, rules, mesh)

@@ -1,0 +1,2 @@
+from repro.serving.planner import plan_serving, ServingPlan
+from repro.serving.engine import ServingEngine, Request

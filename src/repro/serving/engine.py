@@ -1,0 +1,116 @@
+"""Serving engine: continuous-batched decode driven by the Meili data plane.
+
+Requests are flows (paper §5.1.2): each request's tokens stay on its assigned
+pipeline instance; when a pipeline saturates, new requests spill to the
+instance with the most available capacity; completed sequences free slots
+(continuous batching). The TrafficOrchestrator does admission + placement;
+per-instance KV caches play the per-pipeline ring-buffer role (fixed-capacity,
+single-writer).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    out: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.max_new_tokens
+
+
+class PipelineInstance:
+    """One replicated pipeline: a slot-ed KV cache + decode step."""
+
+    def __init__(self, model: Model, params, slots: int, max_len: int,
+                 dtype=jnp.float32):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.cache, _ = model.init_cache(slots, max_len, dtype)
+        self.active: Dict[int, Request] = {}     # slot -> request
+        self.free = list(range(slots))
+        self._step = jax.jit(
+            lambda p, c, t: model.decode_step(p, c, t, impl="blocked"))
+
+    @property
+    def available(self) -> int:
+        return len(self.free)
+
+    def admit(self, req: Request) -> bool:
+        if not self.free:
+            return False
+        slot = self.free.pop()
+        self.active[slot] = req
+        return True
+
+    def step(self) -> None:
+        if not self.active:
+            return
+        tokens = np.zeros((self.slots,), np.int32)
+        for slot, req in self.active.items():
+            seq = req.prompt + req.out
+            tokens[slot] = seq[-1]
+        logits, self.cache = self._step(self.params, self.cache,
+                                        jnp.asarray(tokens))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        finished = []
+        for slot, req in self.active.items():
+            req.out.append(int(nxt[slot]))
+            if req.done:
+                finished.append(slot)
+        for slot in finished:
+            del self.active[slot]
+            self.free.append(slot)
+
+
+class ServingEngine:
+    """N pipeline instances + flow-sticky admission (Meili TO semantics)."""
+
+    def __init__(self, model: Model, params, num_pipelines: int,
+                 slots_per_pipeline: int = 8, max_len: int = 128,
+                 dtype=jnp.float32):
+        self.pipelines = [
+            PipelineInstance(model, params, slots_per_pipeline, max_len,
+                             dtype)
+            for _ in range(num_pipelines)]
+        self.pending: List[Request] = []
+        self.completed: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    def step(self) -> None:
+        # Admission: highest-available-capacity pipeline first (paper §5.2).
+        still = []
+        for req in self.pending:
+            cand = max(self.pipelines, key=lambda p: p.available)
+            if not cand.admit(req):
+                still.append(req)
+        self.pending = still
+        for p in self.pipelines:
+            before = list(p.active.values())
+            p.step()
+            for req in before:
+                if req.done and req not in self.completed:
+                    self.completed.append(req)
+
+    def run(self, max_steps: int = 256) -> List[Request]:
+        for _ in range(max_steps):
+            if not self.pending and all(not p.active for p in self.pipelines):
+                break
+            self.step()
+        return self.completed

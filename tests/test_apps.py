@@ -1,0 +1,91 @@
+"""The six paper applications: semantics + parallel data-plane equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import ALL_APPS, app_resources, synth_packets
+from repro.apps.nf import ddos_check
+from repro.core.executor import ParallelDataPlane
+from repro.core.graph import run_pipeline
+from repro.core.pool import COMPRESSION, CPU, CRYPTO, REGEX
+
+PKTS = synth_packets(batch=48, num_flows=6, pkt_bytes=256, seed=3)
+
+
+@pytest.mark.parametrize("name", ["ID", "ICG", "ISG", "FW", "FM", "LLB"])
+def test_parallel_equals_oracle(name):
+    app = ALL_APPS(impl="ref")[name]
+    oracle = run_pipeline(app, PKTS)
+    dp = ParallelDataPlane(app, num_pipelines=3, capacity_per_pipeline=10)
+    out = dp.process(PKTS)
+    for a, b in zip(jax.tree.leaves(oracle), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resource_footprints_match_paper_table3():
+    apps = ALL_APPS(impl="ref")
+    assert app_resources(apps["ID"]) == sorted({CPU, REGEX})
+    assert app_resources(apps["ICG"]) == sorted({CPU, COMPRESSION})
+    assert app_resources(apps["ISG"]) == sorted({CPU, REGEX, CRYPTO})
+    assert app_resources(apps["FW"]) == [CPU]
+    assert app_resources(apps["FM"]) == [CPU]
+    assert app_resources(apps["LLB"]) == [CPU]
+    assert len(apps["ISG"].stages) >= 4          # Listing 1's four functions
+
+
+def test_stage_counts_match_paper():
+    apps = ALL_APPS(impl="ref")
+    assert len(apps["ID"].stages) == 3
+    assert len(apps["ICG"].stages) == 2
+    assert len(apps["FW"].stages) == 2
+    assert len(apps["FM"].stages) == 2
+
+
+def test_url_filter_drops_matches():
+    app = ALL_APPS(impl="ref")["ID"]
+    out = run_pipeline(app, PKTS)
+    hits = np.asarray(out.meta["match_num"])
+    mask = np.asarray(out.mask)
+    assert hits.max() > 0, "traffic should contain embedded patterns"
+    assert not mask[hits > 0].any(), "matched packets must be dropped"
+    assert mask[hits == 0].all()
+
+
+def test_ddos_check_flags_low_entropy():
+    payload = np.zeros((2, 256), np.uint8)
+    payload[0] = 65                              # constant payload: low joint H
+    rng = np.random.default_rng(0)
+    payload[1] = rng.integers(0, 256, 256)
+    batch = dataclasses.replace(
+        PKTS, payload=jnp.asarray(payload),
+        length=jnp.asarray([256, 256]),
+        five_tuple=PKTS.five_tuple[:2], mask=jnp.ones(2, bool), meta={})
+    keep = ddos_check(batch)
+    assert bool(keep[1])                         # random traffic passes
+
+
+def test_ipsec_encrypts_payload_and_sets_esp():
+    app = ALL_APPS(impl="ref")["ISG"]
+    out = run_pipeline(app, PKTS)
+    assert (np.asarray(out.five_tuple[:, 4]) == 50).all()
+    assert not np.array_equal(np.asarray(out.payload), np.asarray(PKTS.payload))
+    assert "digest" in out.meta
+
+
+def test_flow_monitor_counters():
+    app = ALL_APPS(impl="ref")["FM"]
+    out = run_pipeline(app, PKTS)
+    assert "pkt_count" in out.meta and "byte_count" in out.meta
+    np.testing.assert_array_equal(np.asarray(out.meta["byte_count"]),
+                                  np.asarray(PKTS.length))
+
+
+def test_l7lb_assigns_backends():
+    app = ALL_APPS(impl="ref")["LLB"]
+    out = run_pipeline(app, PKTS)
+    be = np.asarray(out.meta["backend"])
+    assert be.min() >= 0 and be.max() < 8
+    assert len(np.unique(be)) > 1                # spreads load

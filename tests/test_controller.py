@@ -1,0 +1,95 @@
+"""MeiliController: demand formula, submit/scale/failover lifecycle."""
+import pytest
+
+from repro.core import replication as repl
+from repro.core.controller import MeiliController
+from repro.core.pool import paper_cluster
+from repro.core.profiler import synthetic_profile
+from repro.apps import ALL_APPS
+
+BITS = 1500 * 8 * 256.0
+ISG_LAT = {"ddos_check": 400e-6, "url_check": 300e-6, "ipsec_encap": 150e-6,
+           "sha": 250e-6, "aes": 350e-6}
+
+
+def make_ctrl():
+    return MeiliController(paper_cluster())
+
+
+def isg_profile():
+    app = ALL_APPS(impl="ref")["ISG"]
+    return app, synthetic_profile(app.stage_names(), ISG_LAT, BITS)
+
+
+def test_demand_formula_matches_paper():
+    ctrl = make_ctrl()
+    app, prof = isg_profile()
+    R, r_s, t_R = ctrl.demand(prof, target_gbps=2 * t_R_of(prof))
+    n_groups = int(2 * t_R_of(prof) // t_R)
+    for s in prof.stages:
+        assert r_s[s] >= R[s] * n_groups
+
+
+def t_R_of(prof):
+    R = repl.num_replication(prof.stages, prof.l_s)
+    rate = repl.pipeline_throughput(prof.stages, prof.l_s, R)
+    return rate * prof.batch_bits() / 1e9
+
+
+def test_submit_meets_small_target():
+    ctrl = make_ctrl()
+    app, prof = isg_profile()
+    dep = ctrl.submit(app, target_gbps=5.0, profile=prof)
+    assert dep.achievable_gbps >= 5.0
+    assert dep.allocation.satisfied()
+    # heterogeneity: regex on a bf2, aes on a pensando
+    assert all(n.startswith("bf2") for n in dep.allocation.nics_for("url_check"))
+    assert all(n.startswith("pensando")
+               for n in dep.allocation.nics_for("aes"))
+
+
+def test_adaptive_scale_up_and_down():
+    ctrl = make_ctrl()
+    app, prof = isg_profile()
+    ctrl.submit(app, target_gbps=5.0, profile=prof)
+    dep = ctrl.adaptive_scale(app.name, 10.0)
+    assert dep.achievable_gbps >= 10.0
+    units_up = dict(dep.r_s)
+    dep = ctrl.adaptive_scale(app.name, 3.0)
+    assert dep.achievable_gbps >= 3.0
+    assert sum(dep.r_s.values()) <= sum(units_up.values())
+
+
+def test_failover_replaces_lost_units():
+    ctrl = make_ctrl()
+    app, prof = isg_profile()
+    dep = ctrl.submit(app, target_gbps=5.0, profile=prof)
+    nic = dep.allocation.nics_for("aes")[0]
+    impacted = ctrl.handle_failure(nic)
+    assert app.name in impacted
+    dep2 = ctrl.deployments[app.name]
+    assert nic not in dep2.allocation.nics_for("aes")
+    assert dep2.allocation.units("aes") >= 1
+    assert any(e["event"] == "failover" for e in ctrl.events)
+
+
+def test_terminate_reclaims_resources():
+    ctrl = make_ctrl()
+    app, prof = isg_profile()
+    before = ctrl.pool.free_total("cpu")
+    ctrl.submit(app, target_gbps=5.0, profile=prof)
+    assert ctrl.pool.free_total("cpu") < before
+    ctrl.terminate(app.name)
+    assert ctrl.pool.free_total("cpu") == before
+
+
+def test_fcfs_multi_app():
+    ctrl = make_ctrl()
+    apps = ALL_APPS(impl="ref")
+    lat_fw = {"rule_match": 200e-6, "conn_track": 150e-6}
+    prof_fw = synthetic_profile(apps["FW"].stage_names(), lat_fw, BITS)
+    app, prof = isg_profile()
+    d1 = ctrl.submit(app, 5.0, prof)
+    d2 = ctrl.submit(apps["FW"], 20.0, prof_fw)
+    assert d1.allocation.satisfied() and d2.allocation.satisfied()
+    assert len(ctrl.deployments) == 2

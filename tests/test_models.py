@@ -1,0 +1,150 @@
+"""Per-arch smoke tests (reduced configs): forward/train-step shapes + no
+NaNs; decode==forward consistency; loss decreases under training."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.configs.base import ShapeConfig
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import make_train_step
+from repro.models import build
+from repro.models import lm as lm_mod
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch_for(cfg, B=2, S=32, dtype=jnp.float32):
+    if cfg.family == "encdec":
+        return {"frames": jnp.zeros((B, S, cfg.d_model), dtype),
+                "tokens": jnp.ones((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        return {"patches": jnp.zeros((B, cfg.frontend_tokens, cfg.d_model),
+                                     dtype),
+                "tokens": jnp.ones((B, S), jnp.int32)}
+    return {"tokens": jnp.ones((B, S), jnp.int32)}
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_arch_smoke_forward_and_loss(name):
+    cfg = ARCHS[name].reduced().replace(remat=False)
+    model = build(cfg)
+    params, axes = model.init(KEY, jnp.float32)
+    batch = _batch_for(cfg)
+    x = model.forward(params, batch, impl="blocked")
+    B = 2
+    S_expect = 32 + (cfg.frontend_tokens if cfg.family == "vlm" else 0)
+    assert x.shape == (B, S_expect, cfg.d_model)
+    assert bool(jnp.isfinite(x).all()), "non-finite activations"
+    loss = model.loss(params, batch, impl="blocked")
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_arch_smoke_one_train_step(name):
+    cfg = ARCHS[name].reduced().replace(remat=False, microbatch=2)
+    model = build(cfg)
+    params, _ = model.init(KEY, jnp.float32)
+    mesh = make_host_mesh()
+    shape = ShapeConfig("t", 32, 4, "train")
+    step_fn, opt_init = make_train_step(model, shape, mesh, warmup=1)
+    opt = opt_init(params)
+    batch = _batch_for(cfg, B=4)
+    params2, opt2, loss, gnorm = jax.jit(step_fn)(params, opt, batch,
+                                                  jnp.int32(1))
+    assert np.isfinite(float(loss)) and np.isfinite(float(gnorm))
+    # parameters actually moved
+    moved = jax.tree.reduce(
+        lambda acc, ab: acc or bool(jnp.any(ab)),
+        jax.tree.map(lambda a, b: jnp.any(a != b), params, params2), False)
+    assert moved
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_arch_smoke_decode_step(name):
+    cfg = ARCHS[name].reduced().replace(remat=False)
+    model = build(cfg)
+    params, _ = model.init(KEY, jnp.float32)
+    cache, _ = model.init_cache(2, 16, jnp.float32)
+    lg, cache2 = model.decode_step(params, cache,
+                                   jnp.ones((2,), jnp.int32),
+                                   impl="blocked")
+    assert lg.shape == (2, cfg.vocab)
+    assert bool(jnp.isfinite(lg).all())
+    assert int(cache2["pos"]) == 1
+
+
+@pytest.mark.parametrize("name", ["olmo-1b", "gemma3-1b", "mamba2-370m",
+                                  "jamba-1.5-large-398b"])
+def test_decode_matches_forward(name):
+    cfg = ARCHS[name].reduced().replace(remat=False)
+    model = build(cfg)
+    params, _ = model.init(jax.random.PRNGKey(1), jnp.float32)
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
+    x = lm_mod.forward(cfg, params, toks, impl="blocked")
+    full = lm_mod.logits(cfg, params, x)
+    cache, _ = model.init_cache(B, 16, jnp.float32)
+    for t in range(S):
+        lg, cache = model.decode_step(params, cache, toks[:, t],
+                                      impl="blocked")
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, t]),
+                                   atol=5e-4, rtol=1e-3)
+
+
+def test_prefill_then_decode_matches_forward():
+    cfg = ARCHS["olmo-1b"].reduced().replace(remat=False)
+    model = build(cfg)
+    params, _ = model.init(jax.random.PRNGKey(1), jnp.float32)
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S + 1), 0, cfg.vocab)
+    lg_prefill, cache = model.prefill(params, {"tokens": toks[:, :S]},
+                                      max_len=16, impl="blocked",
+                                      cache_dtype=jnp.float32)
+    x = lm_mod.forward(cfg, params, toks[:, :S], impl="blocked")
+    full = lm_mod.logits(cfg, params, x)
+    np.testing.assert_allclose(np.asarray(lg_prefill), np.asarray(full[:, -1]),
+                               atol=5e-4, rtol=1e-3)
+    lg, cache = model.decode_step(params, cache, toks[:, S], impl="blocked")
+    x2 = lm_mod.forward(cfg, params, toks, impl="blocked")
+    full2 = lm_mod.logits(cfg, params, x2)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full2[:, -1]),
+                               atol=5e-4, rtol=1e-3)
+
+
+def test_training_reduces_loss():
+    cfg = ARCHS["olmo-1b"].reduced().replace(remat=False, microbatch=1)
+    model = build(cfg)
+    params, _ = model.init(KEY, jnp.float32)
+    mesh = make_host_mesh()
+    shape = ShapeConfig("t", 32, 4, "train")
+    step_fn, opt_init = make_train_step(model, shape, mesh, base_lr=1e-2,
+                                        warmup=2, total_steps=40)
+    opt = opt_init(params)
+    jit_step = jax.jit(step_fn)
+    tok = jax.random.randint(jax.random.PRNGKey(5), (4, 32), 0, cfg.vocab)
+    batch = {"tokens": tok}                     # memorize one batch
+    first = last = None
+    for i in range(30):
+        params, opt, loss, _ = jit_step(params, opt, batch, jnp.int32(i))
+        first = first if first is not None else float(loss)
+        last = float(loss)
+    assert last < first * 0.7, (first, last)
+
+
+def test_param_counts_match_known_scale():
+    tot, act = build(ARCHS["qwen2.5-32b"]).param_counts()
+    assert 31e9 < tot < 36e9                    # ~32.7B
+    assert act == tot
+    # NOTE: the ASSIGNED config (48L x 64e x d_ff 1408) totals ~27B — the
+    # production Moonlight-16B has 27 layers; we implement the assignment.
+    tot, act = build(ARCHS["moonshot-v1-16b-a3b"]).param_counts()
+    assert 25e9 < tot < 30e9
+    assert 2e9 < act < 4.5e9                    # ~3B active (matches "a3b")
+    tot, act = build(ARCHS["jamba-1.5-large-398b"]).param_counts()
+    assert 330e9 < tot < 430e9
+    assert 60e9 < act < 130e9
+    tot, act = build(ARCHS["mamba2-370m"]).param_counts()
+    assert 2.5e8 < tot < 5.5e8

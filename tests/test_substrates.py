@@ -1,0 +1,145 @@
+"""Data pipeline, optimizer, schedules, checkpointing, compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              restore_checkpoint, save_checkpoint)
+from repro.data import SyntheticLMDataset, host_shard_iterator
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         cosine_schedule, wsd_schedule)
+from repro.parallel.compression import (compress_tree, dequantize_int8,
+                                        quantize_int8, zero_residual)
+
+
+# -- data ---------------------------------------------------------------------
+
+def test_data_deterministic():
+    ds = SyntheticLMDataset(vocab=1000, seq_len=64, seed=7)
+    b1 = ds.batch(3, 4)["tokens"]
+    b2 = ds.batch(3, 4)["tokens"]
+    np.testing.assert_array_equal(b1, b2)
+    b3 = ds.batch(4, 4)["tokens"]
+    assert not np.array_equal(b1, b3)
+
+
+def test_data_shapes_and_range():
+    ds = SyntheticLMDataset(vocab=100, seq_len=32)
+    b = ds.batch(0, 8)["tokens"]
+    assert b.shape == (8, 32)
+    assert b.min() >= 0 and b.max() < 100
+
+
+def test_host_shards_disjoint_cover():
+    ds = SyntheticLMDataset(vocab=50, seq_len=16, seed=1)
+    full = ds.batch(0, 8)["tokens"]
+    it0 = host_shard_iterator(ds, 8, 0, 2)
+    it1 = host_shard_iterator(ds, 8, 1, 2)
+    s0, s1 = next(it0)["tokens"], next(it1)["tokens"]
+    np.testing.assert_array_equal(np.concatenate([s0, s1]), full)
+
+
+def test_resume_replays_stream():
+    ds = SyntheticLMDataset(vocab=50, seq_len=16)
+    it = host_shard_iterator(ds, 4, 0, 1)
+    next(it)
+    second = next(it)["tokens"]
+    it_resumed = host_shard_iterator(ds, 4, 0, 1, start_step=1)
+    np.testing.assert_array_equal(next(it_resumed)["tokens"], second)
+
+
+# -- optimizer --------------------------------------------------------------------
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(params, g, state, lr=0.1,
+                                        weight_decay=0.0)
+    assert float(loss(params)) < 1e-3
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.asarray([3.0, 4.0])}                     # norm 5
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(5.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0)
+
+
+def test_bf16_state_option():
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    st = adamw_init(params, jnp.bfloat16)
+    assert st.mu["w"].dtype == jnp.bfloat16
+
+
+def test_wsd_schedule_shape():
+    lr = wsd_schedule(1.0, warmup=10, total=100, decay_frac=0.2)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1.0)
+    assert float(lr(50)) == pytest.approx(1.0)              # stable plateau
+    assert float(lr(99)) < 0.2                              # decayed
+    c = cosine_schedule(1.0, 10, 100)
+    assert float(c(50)) < 1.0 and float(c(99)) < 0.05
+
+
+# -- checkpoint ---------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.asarray([1, 2], jnp.int32)}}
+    save_checkpoint(str(tmp_path), 5, tree)
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, step = restore_checkpoint(str(tmp_path), like)
+    assert step == 5
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_ignores_uncommitted(tmp_path):
+    tree = {"a": jnp.zeros((2,))}
+    save_checkpoint(str(tmp_path), 1, tree)
+    # fake a partial write
+    os.makedirs(tmp_path / "step_00000002")
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_checkpoint_manager_gc(tmp_path):
+    m = CheckpointManager(str(tmp_path), every=1, keep=2)
+    tree = {"a": jnp.zeros((1,))}
+    for s in range(1, 6):
+        m.maybe_save(s, tree)
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(kept) == 2 and kept[-1] == "step_00000005"
+
+
+def test_checkpoint_respects_every(tmp_path):
+    m = CheckpointManager(str(tmp_path), every=10)
+    assert m.maybe_save(5, {"a": jnp.zeros(1)}) is None
+    assert m.maybe_save(10, {"a": jnp.zeros(1)}) is not None
+
+
+# -- gradient compression ------------------------------------------------------------
+
+def test_quantize_roundtrip_error_bound():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(256,)) * 3)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+    assert err.max() <= float(s) / 2 + 1e-6
+
+
+def test_error_feedback_is_unbiased_over_steps():
+    """Repeatedly compressing the same gradient with error feedback: the
+    cumulative transmitted sum approaches the true cumulative gradient."""
+    rng = np.random.default_rng(1)
+    g = {"w": jnp.asarray(rng.normal(size=(64,)))}
+    res = zero_residual(g)
+    sent = np.zeros(64)
+    for i in range(50):
+        q, s, res = compress_tree(g, res)
+        sent += np.asarray(dequantize_int8(q["w"], s["w"]))
+    np.testing.assert_allclose(sent / 50, np.asarray(g["w"]), atol=1e-2)
