@@ -1,0 +1,17 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: test bench bench-dataplane
+
+# Full run (no -x): the suite currently carries one known pre-existing
+# failure (test_dryrun_small); stopping at it would skip later modules.
+test:
+	python -m pytest -q
+
+# Full benchmark sweep (all paper figures + the data-plane grid).
+bench:
+	python -m benchmarks.run
+
+# Just the fused data-plane grid; writes BENCH_dataplane.json.
+bench-dataplane:
+	python -m benchmarks.bench_dataplane

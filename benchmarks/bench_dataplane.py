@@ -1,0 +1,105 @@
+"""End-to-end data-plane throughput: ParallelDataPlane.process (ISSUE 1).
+
+Measures packets/sec of the full partition -> dispatch -> aggregate hot path
+at B in {1k, 16k} x pipelines in {1, 4, 8}, the grid the §5.1.2 single-flow
+scalability claim rests on. Emits the standard ``name,us_per_call,derived``
+CSV rows and writes ``BENCH_dataplane.json`` next to the repo root so later
+PRs have a perf trajectory to compare against.
+
+The app is the CPU-only Firewall (no accelerator impl selection noise);
+traffic is the deterministic synthetic mix (128 flows, 256 B payloads —
+payload width only scales the copy cost, not the dispatch overhead under
+test). Per-pipeline capacity is sized to B/pipelines so the batch exactly
+fills the replica set and spill paths stay exercised.
+
+Run headlessly:  PYTHONPATH=src python -m benchmarks.bench_dataplane
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+
+from benchmarks.common import row, timeit
+from repro.apps.nf import firewall
+from repro.apps.packets import synth_packets
+from repro.core.executor import ParallelDataPlane
+
+GRID_B = (1024, 16384)
+GRID_PIPELINES = (1, 4, 8)
+PKT_BYTES = 256
+NUM_FLOWS = 128
+
+# Pre-fusion baseline, measured on this exact grid at the seed commit
+# (per-packet Python partition + per-sub-batch per-stage dispatch + ad hoc
+# rings). Kept for the perf trajectory; speedup_vs_seed in the JSON is
+# current/seed.
+SEED_US_PER_CALL = {
+    ("dataplane_B1024_P1"): 23037.083,
+    ("dataplane_B1024_P4"): 57112.819,
+    ("dataplane_B1024_P8"): 92385.512,
+    ("dataplane_B16384_P1"): 76708.208,
+    ("dataplane_B16384_P4"): 96271.901,
+    ("dataplane_B16384_P8"): 218263.888,
+}
+
+
+def bench_one(B: int, npipe: int, iters: int = 10, warmup: int = 3) -> dict:
+    pkts = synth_packets(batch=B, num_flows=NUM_FLOWS, pkt_bytes=PKT_BYTES)
+    dp = ParallelDataPlane(firewall(), num_pipelines=npipe,
+                           capacity_per_pipeline=max(1.0, B / npipe))
+    for _ in range(warmup):
+        jax.block_until_ready(dp.process(pkts))
+    compiles_after_warmup = getattr(dp, "dispatch_stats", {}).get("compiles")
+    us = timeit(dp.process, pkts, iters=iters, warmup=0) * 1e6
+    stats = getattr(dp, "dispatch_stats", None)
+    steady_compiles = (stats["compiles"] - compiles_after_warmup
+                       if stats else None)
+    name = f"dataplane_B{B}_P{npipe}"
+    seed_us = SEED_US_PER_CALL.get(name)
+    return {
+        "name": name,
+        "B": B,
+        "pipelines": npipe,
+        "us_per_call": us,
+        "pps": B / (us * 1e-6),
+        "steady_state_recompiles": steady_compiles,
+        "seed_us_per_call": seed_us,
+        "speedup_vs_seed": (seed_us / us) if seed_us else None,
+    }
+
+
+def run(emit=print) -> list:
+    results = []
+    for B in GRID_B:
+        for npipe in GRID_PIPELINES:
+            r = bench_one(B, npipe)
+            results.append(r)
+            emit(row(r["name"], r["us_per_call"],
+                     f"{r['pps'] / 1e6:.3f}Mpps"))
+            if r["steady_state_recompiles"] is not None:
+                assert r["steady_state_recompiles"] == 0, (
+                    "steady-state recompile detected", r)
+    return results
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    results = run(emit=print)
+    out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_dataplane.json"
+    payload = {
+        "benchmark": "ParallelDataPlane.process",
+        "app": "firewall",
+        "pkt_bytes": PKT_BYTES,
+        "num_flows": NUM_FLOWS,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "rows": results,
+    }
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

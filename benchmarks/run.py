@@ -9,13 +9,17 @@ Prints ``name,us_per_call,derived`` CSV rows. Mapping:
   bench_redirection  -> Fig 15/16/17 (TO microbenchmarks)
   bench_state        -> Fig 20 + App. C (state engine ops)
   bench_kernels      -> kernel hot-spots (µs/call + TPU roofline context)
+  bench_dataplane    -> fused data-plane pps (ISSUE 1; writes BENCH_dataplane.json)
+
+Run one module headlessly:   python -m benchmarks.bench_dataplane
+Run everything:              python -m benchmarks.run   (or: make bench)
 """
 import sys
 import traceback
 
-from benchmarks import (bench_adaptive, bench_bandwidth, bench_efficiency,
-                        bench_kernels, bench_pipeline, bench_redirection,
-                        bench_scalability, bench_state)
+from benchmarks import (bench_adaptive, bench_bandwidth, bench_dataplane,
+                        bench_efficiency, bench_kernels, bench_pipeline,
+                        bench_redirection, bench_scalability, bench_state)
 
 ALL = [
     ("fig7_8", bench_pipeline),
@@ -26,6 +30,7 @@ ALL = [
     ("fig15_17", bench_redirection),
     ("fig20", bench_state),
     ("kernels", bench_kernels),
+    ("dataplane", bench_dataplane),
 ]
 
 

@@ -1,25 +1,62 @@
-"""Executors + the parallel data plane (paper §3, §5).
+"""Executors + the fused parallel data plane (paper §3, §5; ISSUE 1).
 
 An Executor is the isolated runtime for one stage (paper: a container; here:
-one jit-compiled program). A PipelineRunner chains executors; the
-ParallelDataPlane couples a TrafficOrchestrator with N pipeline replicas and
-per-pipeline ring buffers, implementing partition -> process -> aggregate.
+one jit-compiled program, shared process-wide by every replica of the stage).
+A PipelineRunner chains executors; the ParallelDataPlane couples a
+TrafficOrchestrator with N pipeline replicas and per-pipeline ring buffers,
+implementing partition -> process -> aggregate.
+
+Steady-state per-batch cost is ONE vectorized host pass (the TO's per-flow
+partition, numpy) plus ONE cached fused device program that does everything
+else:
+
+  gather+pad packets into (N, M) lanes -> push/pop the persistent stacked
+  ingress rings -> run the full stage chain once over all lanes -> gather
+  the egress back to original packet order.
+
+``M`` is the per-pipeline sub-batch slot count, padded up to a power-of-two
+bucket so the set of compiled shapes stays small and bounded (recompiles are
+counted in ``dispatch_stats`` — zero in steady state). Rings are allocated
+once per data plane (one stacked device buffer for all N pipelines) instead
+of per call. Aggregation is a single device-side gather with a
+host-precomputed index, replacing the host concat + inverse-permutation of
+the unfused design. See DESIGN.md ("Fused data plane").
 
 Semantics contract (tested): ParallelDataPlane(app, R).process(batch) ==
 graph.run_pipeline(app, batch) up to packet order — i.e. replication and
-traffic partitioning never change application semantics.
+traffic partitioning never change application semantics. With migration
+active, packets of halted flows are buffered by the TO and the processed
+remainder is returned in original relative order.
+
+That contract presumes UCFs are **per-packet (elementwise)**: splitting a
+batch across pipeline replicas — fused or not — already changes which rows
+a cross-row reduction would see, so a UCF that aggregates across its batch
+has no well-defined parallel semantics. The fused dispatch additionally
+runs the chain over all lanes at once, including pad slots whose content is
+stale ring data; pad outputs are never referenced by the egress gather, but
+a non-elementwise UCF would observe them. All paper apps (apps/nf.py) are
+elementwise per the Table 2 paradigm ops.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import MeiliApp, PacketBatch, stage_runner
+from repro.core.graph import (MeiliApp, PacketBatch, apply_stage, cache_put,
+                              chain_key, chain_runner, stage_runner)
 from repro.core.orchestrator import SubBatch, TrafficOrchestrator
-from repro.core.ringbuffer import Ring, make_ring, pop, push
+from repro.core.ringbuffer import Ring, make_rings, pop_many, push_many
 from repro.core import replication as repl
+
+MIN_BUCKET = 16
+
+
+def _bucket(n: int) -> int:
+    """Round a sub-batch size up to the next power-of-two slot count."""
+    return max(MIN_BUCKET, 1 << (max(1, n) - 1).bit_length())
 
 
 class Executor:
@@ -28,21 +65,54 @@ class Executor:
 
     def __init__(self, fn):
         self.fn = fn
-        self.run = stage_runner(fn)
+        self.run = stage_runner(fn)          # process-wide cached program
 
 
 class PipelineRunner:
     def __init__(self, app: MeiliApp):
         self.executors = [Executor(f) for f in app.stages]
+        self._chain = chain_runner(app)      # one fused program per chain
 
     def process(self, batch: PacketBatch) -> PacketBatch:
-        for ex in self.executors:
-            batch = ex.run(batch)
-        return batch
+        return self._chain(batch)
+
+
+# One fused dispatch program per stage chain, shared by every data plane in
+# the process (jax.jit caches per-shape specializations underneath).
+_DISPATCH_PROGRAMS: Dict[Any, Callable] = {}
+
+
+def _dispatch_program(app: MeiliApp) -> Callable:
+    key = chain_key(app)
+    prog = _DISPATCH_PROGRAMS.get(key)
+    if prog is None:
+        stages = tuple(app.stages)
+
+        def dispatch(rings: Ring, batch: PacketBatch, perm: jnp.ndarray,
+                     counts: jnp.ndarray, out_idx: jnp.ndarray
+                     ) -> Tuple[Ring, PacketBatch]:
+            # perm: (N, M) source index per lane slot; counts: (N,) valid
+            # slots per lane; out_idx: (B,) flat lane*M+slot per egress row.
+            stacked = jax.tree.map(lambda a: a[perm], batch)       # (N, M, ...)
+            rings = push_many(rings, stacked, counts)              # ingress
+            rings, rows, _valid = pop_many(rings, perm.shape[1])
+            flat = jax.tree.map(
+                lambda a: a.reshape((-1,) + a.shape[2:]), rows)    # (N*M, ...)
+            for fn in stages:
+                flat = apply_stage(fn, flat)
+            out = jax.tree.map(lambda a: a[out_idx], flat)         # egress
+            return rings, out
+
+        # Donate the ring: the caller replaces self._rings with the returned
+        # one, so XLA may update the (lanes x cap x pkt) allocation in place
+        # instead of copying it every batch.
+        prog = cache_put(_DISPATCH_PROGRAMS, key,
+                         jax.jit(dispatch, donate_argnums=(0,)))
+    return prog
 
 
 class ParallelDataPlane:
-    """N replicated pipelines + TO + per-pipeline ring buffers."""
+    """N replicated pipelines + TO + persistent per-pipeline ring buffers."""
 
     def __init__(self, app: MeiliApp, num_pipelines: Optional[int] = None,
                  R: Optional[Dict[str, int]] = None,
@@ -59,26 +129,132 @@ class ParallelDataPlane:
         self.to = TrafficOrchestrator(num_pipelines, capacity_per_pipeline)
         self.pipelines = [PipelineRunner(app) for _ in range(num_pipelines)]
         self.ring_capacity = ring_capacity
-        self._ingress: List[Optional[Ring]] = [None] * num_pipelines
-        self._egress: List[Optional[Ring]] = [None] * num_pipelines
+        self._dispatch = _dispatch_program(app)
+        self._rings: Optional[Ring] = None
+        self._ring_cap = 0
+        self._ring_lanes = 0
+        self._ring_proto_key = None
+        # compiles = real XLA specializations of the shared dispatch program,
+        # read off jax.jit's own cache (shape-key proxy as fallback on jax
+        # versions without _cache_size). Steady state must show zero growth.
+        self._shape_keys: set = set()
+        self.dispatch_stats = {"calls": 0, "compiles": 0}
 
-    def _rings_for(self, pid: int, proto: PacketBatch):
-        if self._ingress[pid] is None:
-            self._ingress[pid] = make_ring(jax.tree.map(lambda a: a[0], proto),
-                                           self.ring_capacity)
-        return self._ingress[pid]
+    def _jit_cache_size(self) -> Optional[int]:
+        try:
+            return self._dispatch._cache_size()
+        except AttributeError:
+            return None
 
+    def _empty_result(self, batch: PacketBatch) -> PacketBatch:
+        """A zero-packet batch with the same pytree structure a processed
+        round returns (UCF-added meta keys included): the chain runs on a
+        MIN_BUCKET dummy — not on zero rows, which some kernel impls reject —
+        and the result is sliced empty."""
+        dummy = jax.tree.map(
+            lambda a: jnp.zeros((MIN_BUCKET,) + a.shape[1:], a.dtype), batch)
+        return jax.tree.map(lambda a: a[:0], chain_runner(self.app)(dummy))
+
+    # -- persistent stacked rings ---------------------------------------------
+    def _ensure_rings(self, batch: PacketBatch, M: int) -> None:
+        proto = jax.tree.map(lambda a: a[0], batch)
+        proto_key = tuple((tuple(a.shape), str(a.dtype))
+                          for a in jax.tree.leaves(proto))
+        lanes = len(self.to.pipelines)
+        if (self._rings is None or M > self._ring_cap
+                or lanes != self._ring_lanes
+                or proto_key != self._ring_proto_key):
+            # Power-of-two cap: cursors are monotonic int32 indexed mod cap,
+            # and slot indices survive the two's-complement wrap only when
+            # cap divides 2^32.
+            self._ring_cap = _bucket(max(self.ring_capacity, M))
+            self._ring_lanes = lanes
+            self._rings = make_rings(proto, self._ring_cap, lanes)
+            self._ring_proto_key = proto_key
+
+    # -- partition -> fused dispatch -> aggregate ------------------------------
     def process(self, batch: PacketBatch) -> PacketBatch:
+        assign = self.to.partition_assign(batch)
+        proc = np.nonzero(assign >= 0)[0]      # halted-flow packets buffered
+        if proc.size == 0:
+            return self._empty_result(batch)
+        lanes_of = assign[proc]
+        N = len(self.to.pipelines)
+        counts = np.bincount(lanes_of, minlength=N).astype(np.int32)
+        M = _bucket(int(counts.max()))
+
+        # Host-side index algebra (numpy, O(B)): lane slot per packet and the
+        # egress gather index that undoes the lane layout.
+        order = np.argsort(lanes_of, kind="stable")
+        starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        lanes_sorted = lanes_of[order]
+        ranks = np.arange(proc.size) - starts[lanes_sorted]
+        perm = np.zeros((N, M), np.int32)      # pad slots gather row 0 (masked)
+        perm[lanes_sorted, ranks] = proc[order]
+        out_idx = np.empty(proc.size, np.int64)
+        out_idx[order] = lanes_sorted * M + ranks
+
+        # Every jit-facing shape is bucketed — M above, and here the ingress
+        # batch and egress index — so variable-size traffic (B drifting round
+        # to round) recompiles at most once per pow-2 bucket, not per size.
+        B = batch.batch
+        B_pad = _bucket(B)
+        if B_pad != B:
+            batch = jax.tree.map(
+                lambda a: jnp.concatenate(
+                    [a, jnp.zeros((B_pad - B,) + a.shape[1:], a.dtype)], 0),
+                batch)
+        P = proc.size
+        P_pad = _bucket(P)
+        if P_pad != P:
+            out_idx = np.concatenate([out_idx, np.zeros(P_pad - P, np.int64)])
+
+        self._ensure_rings(batch, M)
+        self.dispatch_stats["calls"] += 1
+        before = self._jit_cache_size()
+
+        try:
+            self._rings, out = self._dispatch(
+                self._rings, batch, jnp.asarray(perm), jnp.asarray(counts),
+                jnp.asarray(out_idx))
+        except BaseException:
+            # The ring was donated to the failed call and may already be
+            # invalidated; drop it so the next round reallocates instead of
+            # dying on deleted buffers forever.
+            self._rings = None
+            raise
+
+        after = self._jit_cache_size()
+        if after is not None:
+            self.dispatch_stats["compiles"] += after - before
+        else:                                 # proxy: predicted shape keys
+            skey = (B_pad, P_pad, M, N, self._ring_cap, self._ring_proto_key)
+            if skey not in self._shape_keys:
+                self._shape_keys.add(skey)
+                self.dispatch_stats["compiles"] += 1
+        if P_pad != P:
+            out = jax.tree.map(lambda a: a[:P], out)
+        return out
+
+    # -- unfused reference path (kept as the dispatch-layer oracle) ------------
+    def process_unfused(self, batch: PacketBatch) -> PacketBatch:
+        """Per-sub-batch dispatch through PipelineRunner, then sequence-number
+        aggregation — the pre-fusion data path, retained for A/B tests and
+        benchmarks."""
         subs = self.to.partition(batch)
+        if not subs:                       # empty batch or every flow halted
+            return self._empty_result(batch)
         done: List[SubBatch] = []
         for sub in subs:
-            # ingress ring -> stage chain -> egress (rings are the hand-off
-            # structure; on one host the pop is immediate).
-            ring = make_ring(jax.tree.map(lambda a: a[0], sub.data),
-                             max(self.ring_capacity, sub.data.batch))
-            ring = push(ring, sub.data)
-            ring, rows, valid = pop(ring, sub.data.batch)
-            out = self.pipelines[sub.pid].process(rows)
-            done.append(SubBatch(pid=sub.pid, seq=sub.seq, indices=sub.indices,
-                                 data=out))
-        return self.to.aggregate(done, total=batch.batch)
+            out = self.pipelines[sub.pid].process(sub.data)
+            done.append(SubBatch(pid=sub.pid, seq=sub.seq,
+                                 indices=sub.indices, data=out))
+        # With migration active the survivors are a subset of the batch:
+        # remap original positions to ranks among survivors so aggregate
+        # reorders within the processed subset.
+        survivors = np.sort(np.concatenate([s.indices for s in done]))
+        if survivors.size < batch.batch:
+            done = [SubBatch(pid=s.pid, seq=s.seq,
+                             indices=np.searchsorted(survivors, s.indices),
+                             data=s.data) for s in done]
+        return self.to.aggregate(done, total=survivors.size)

@@ -178,6 +178,72 @@ def run_pipeline(app: MeiliApp, batch: PacketBatch) -> PacketBatch:
     return batch
 
 
+# -- process-wide compiled-program caches -------------------------------------
+#
+# Replicas differ in placement/timing, never in program: N pipeline replicas
+# of one app must share ONE compiled program per stage (and one per chain),
+# or deployment cost scales O(N x stages) in compiles. Programs are cached
+# process-wide, keyed on stage *identity* — the (kind, ucf, params) triple
+# that fully determines the traced computation. MeiliApp instances built
+# from the same Function objects (e.g. every PipelineRunner replica of one
+# app) hit the same entry. App factories create fresh UCF closures per call,
+# so distinct constructions of "the same" app key separately — the caches
+# are therefore bounded (FIFO eviction; holders keep their own reference, an
+# evicted entry only costs a re-jit for future lookups) so long-running
+# services that construct apps repeatedly don't grow memory without bound.
+
+_CACHE_CAP = 256
+
+
+def cache_put(cache: Dict, key, value, cap: int = _CACHE_CAP):
+    """Insert into a bounded process-wide program cache (FIFO eviction)."""
+    if len(cache) >= cap:
+        cache.pop(next(iter(cache)))
+    cache[key] = value
+    return value
+
+
+_STAGE_RUNNERS: Dict[Any, Callable] = {}
+_CHAIN_RUNNERS: Dict[Any, Callable] = {}
+
+
+def _stage_key(fn: Function):
+    try:
+        params = tuple(sorted(fn.params.items()))
+        hash(params)
+    except TypeError:
+        params = id(fn.params)            # unhashable params: identity key
+    return (fn.kind, fn.ucf, params)
+
+
+def chain_key(app: "MeiliApp"):
+    """Identity of an app's full stage chain (the fused-program cache key)."""
+    return tuple(_stage_key(f) for f in app.stages)
+
+
 def stage_runner(fn: Function) -> Callable[[PacketBatch], PacketBatch]:
-    """A jit-compiled single-stage program (one Executor)."""
-    return jax.jit(lambda b: apply_stage(fn, b))
+    """A jit-compiled single-stage program (one Executor), cached
+    process-wide by stage identity."""
+    key = _stage_key(fn)
+    runner = _STAGE_RUNNERS.get(key)
+    if runner is None:
+        runner = cache_put(_STAGE_RUNNERS, key,
+                           jax.jit(lambda b: apply_stage(fn, b)))
+    return runner
+
+
+def chain_runner(app: "MeiliApp") -> Callable[[PacketBatch], PacketBatch]:
+    """The app's full stage chain fused into ONE jitted program (one XLA
+    dispatch per batch instead of one per stage), cached process-wide."""
+    key = chain_key(app)
+    runner = _CHAIN_RUNNERS.get(key)
+    if runner is None:
+        stages = tuple(app.stages)
+
+        def run(batch: PacketBatch) -> PacketBatch:
+            for fn in stages:
+                batch = apply_stage(fn, batch)
+            return batch
+
+        runner = cache_put(_CHAIN_RUNNERS, key, jax.jit(run))
+    return runner

@@ -13,20 +13,37 @@ the application's replicated pipelines:
     the original packet order;
   * **lazy flow state migration** between pipelines during adaptive scaling.
 
-Control decisions (dict lookups over ~128 flows) are host-side numpy —
-exactly where they run in the paper; the data movement (gather/scatter of
-packet tensors) is JAX.
+Control decisions are host-side numpy — exactly where they run in the paper
+(the TO owns one reserved ARM core, so its work must stay cheap and must not
+touch the device). The partitioner is **flow-granular and vectorized**:
+decisions are made once per unique flow (~128 flows/round in the paper's
+traffic, via ``np.unique``), never per packet, and the per-packet ``assign``
+array is produced with numpy slice/scatter ops. Packets of the same flow are
+allocated contiguously in arrival order: home pipeline first, then existing
+spill pipelines, then highest-available — identical to walking the flow's
+packets one at a time (the reference loop in ``tests/test_partition_vectorized``
+checks this equivalence). Flows themselves are served in first-appearance
+order (flow-major). That is a deliberate departure from a packet-interleaved
+walk: under saturation the two can pick different spill victims, but
+flow-major matches §5.1.2's granularity — the flow is the decision unit —
+and gives each flow the fewest pipelines available at its turn. All data
+movement (gather/scatter of packet tensors) stays JAX/device-side; see
+``core.executor`` and ``DESIGN.md``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import PacketBatch
+
+# Sentinel values in the per-packet assign array.
+ASSIGN_NONE = -1      # not yet assigned (internal)
+ASSIGN_HALTED = -2    # buffered behind a migrating flow
 
 
 def flow_ids(batch: PacketBatch) -> np.ndarray:
@@ -75,49 +92,118 @@ class TrafficOrchestrator:
         self._seq = 0
 
     # -- §5.1.2 traffic partitioning ------------------------------------------
-    def partition(self, batch: PacketBatch) -> List[SubBatch]:
-        """Split an ingress batch across pipelines, flow-granular."""
+    def partition_assign(self, batch: PacketBatch) -> np.ndarray:
+        """Vectorized flow-granular assignment for one ingress batch.
+
+        Returns the per-packet ``assign`` array: pipeline id per packet, or
+        ``ASSIGN_HALTED`` for packets of a migrating flow (those are gathered
+        into the TO's side buffer before returning). Decisions are computed
+        once per *flow*; per-packet work is numpy scatter only.
+
+        Per-flow allocation order (equals one-packet-at-a-time §5.1.2):
+          1. the flow's home pipeline, while it has available capacity;
+          2. the flow's existing spill pipelines, in spill order;
+          3. repeatedly, the active pipeline with the highest available
+             capacity (recorded as a new spill for a homed flow, or as the
+             home for a new flow);
+          4. if every active pipeline is saturated, the remainder overloads
+             the highest-capacity active pipeline (load tracks the overload
+             so ``utilization`` sees it).
+        """
         fids = flow_ids(batch)
         B = len(fids)
         for p in self.pipelines:
             p.load = 0.0
-        assign = np.full(B, -1, dtype=np.int64)
+        assign = np.full(B, ASSIGN_NONE, dtype=np.int64)
+        if B == 0:
+            return assign
 
-        order = np.arange(B)
-        for i in order:
-            f = int(fids[i])
+        npipe = len(self.pipelines)
+        cap = np.array([p.capacity for p in self.pipelines], np.float64)
+        active = np.array([p.active for p in self.pipelines], bool)
+        avail = np.where(active, cap, 0.0)
+        load = np.zeros(npipe, np.float64)
+
+        uniq, first_pos, inverse, counts = np.unique(
+            fids, return_index=True, return_inverse=True, return_counts=True)
+        by_flow = np.argsort(inverse, kind="stable")  # grouped, arrival order
+        group_start = np.concatenate([[0], np.cumsum(counts)])
+
+        def grab(pid: int, seg: np.ndarray, off: int) -> int:
+            """Assign as many of seg[off:] to pid as its capacity allows."""
+            if avail[pid] < 1.0:
+                return off
+            take = min(seg.size - off, int(avail[pid]))
+            assign[seg[off:off + take]] = pid
+            avail[pid] -= take
+            load[pid] += take
+            return off + take
+
+        # Flows in first-appearance order — the order the per-packet walk
+        # would discover them.
+        for u in np.argsort(first_pos, kind="stable"):
+            f = int(uniq[u])
+            seg = by_flow[group_start[u]:group_start[u + 1]]
             if f in self.halted_flows:
-                assign[i] = -2  # buffered during migration
+                assign[seg] = ASSIGN_HALTED
                 continue
-            pid = self.flow_table.get(f)
-            if pid is not None and self.pipelines[pid].active and \
-                    self.pipelines[pid].available >= 1.0:
-                assign[i] = pid
-                self.pipelines[pid].load += 1.0
-                continue
-            # Heavy flow already spilled: keep using its spill pipelines so
-            # the flow touches as FEW pipelines as possible (§5.1.2).
-            cand = None
-            for spid in self.spill_table.get(f, ()):
-                p = self.pipelines[spid]
-                if p.active and p.available >= 1.0:
-                    cand = p
-                    break
-            if cand is None:
-                # New flow, saturated, or halted: the pipeline with the
-                # highest available capacity (§5.2).
-                cand = max((p for p in self.pipelines if p.active),
-                           key=lambda p: p.available, default=None)
-                if cand is None or cand.available < 1.0:
-                    cand = max((p for p in self.pipelines if p.active),
-                               key=lambda p: p.capacity)
-                if pid is not None and cand.pid != pid:
-                    self.spill_table.setdefault(f, []).append(cand.pid)
-            assign[i] = cand.pid
-            cand.load += 1.0
-            if pid is None:
-                self.flow_table[f] = cand.pid  # first pipeline stays "home"
+            # Raised lazily: a batch made entirely of halted-flow packets
+            # must buffer cleanly even with every pipeline scaled down.
+            if not active.any():
+                raise ValueError("partition: no active pipelines")
+            home = self.flow_table.get(f)
+            off = 0
+            if home is not None and active[home]:
+                off = grab(home, seg, off)
+            if off < seg.size:
+                for spid in self.spill_table.get(f, ()):
+                    if active[spid]:
+                        off = grab(spid, seg, off)
+                    if off == seg.size:
+                        break
+            while off < seg.size:
+                pid = int(np.argmax(np.where(active, avail, -1.0)))
+                if avail[pid] >= 1.0:
+                    off = grab(pid, seg, off)
+                else:
+                    # Every active pipeline saturated: overload the largest.
+                    pid = int(np.argmax(np.where(active, cap, -1.0)))
+                    assign[seg[off:]] = pid
+                    load[pid] += seg.size - off
+                    off = seg.size
+                if home is None:
+                    self.flow_table[f] = pid   # first pipeline stays "home"
+                    home = pid
+                elif pid != home:
+                    sp = self.spill_table.setdefault(f, [])
+                    if pid not in sp:
+                        sp.append(pid)
 
+        for p, l in zip(self.pipelines, load):
+            p.load = float(l)
+
+        # Buffer packets of halted (migrating) flows (scan only the halted
+        # subset, not the batch, once per flow).
+        hidx = np.nonzero(assign == ASSIGN_HALTED)[0]
+        if hidx.size:
+            hfids = fids[hidx]
+            for f in np.unique(hfids):
+                sel = hidx[hfids == f]
+                self.halted_flows[int(f)].append(
+                    SubBatch(pid=-1, seq=self._seq, indices=sel,
+                             data=take_batch(batch, jnp.asarray(sel))))
+                self._seq += 1
+        return assign
+
+    def partition(self, batch: PacketBatch) -> List[SubBatch]:
+        """Split an ingress batch across pipelines, flow-granular.
+
+        Compatibility view over :meth:`partition_assign`: materializes one
+        SubBatch per non-empty pipeline (device gather per sub-batch). The
+        fused data plane (``core.executor.ParallelDataPlane``) skips this and
+        consumes the assign array directly.
+        """
+        assign = self.partition_assign(batch)
         subs: List[SubBatch] = []
         for pid in range(len(self.pipelines)):
             idx = np.nonzero(assign == pid)[0]
@@ -127,15 +213,6 @@ class TrafficOrchestrator:
                                  indices=idx,
                                  data=take_batch(batch, jnp.asarray(idx))))
             self._seq += 1
-        # Buffer packets of halted (migrating) flows.
-        hidx = np.nonzero(assign == -2)[0]
-        if hidx.size:
-            for f in set(int(x) for x in fids[hidx]):
-                sel = hidx[fids[hidx] == f]
-                self.halted_flows[f].append(
-                    SubBatch(pid=-1, seq=self._seq, indices=sel,
-                             data=take_batch(batch, jnp.asarray(sel))))
-                self._seq += 1
         return subs
 
     # -- §5.1.2 aggregation -----------------------------------------------------

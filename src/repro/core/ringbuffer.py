@@ -9,6 +9,17 @@ construction. Cursors are monotonic int32 and indexed modulo capacity,
 so occupancy is simply ``tail - head``.
 
 Functional style: every operation returns a new Ring (JAX pytree).
+
+Two layouts share the Ring class:
+
+  * single-lane (``make_ring``/``push``/``pop``): leaves are (cap, ...),
+    cursors are scalars — one ring per pipeline, allocated ad hoc;
+  * stacked multi-lane (``make_rings``/``push_many``/``pop_many``): leaves
+    are (lanes, cap, ...), cursors are (lanes,) — every pipeline's ingress
+    ring lives in ONE device allocation so the fused data-plane program
+    (core.executor) pushes/pops all pipelines in a single traced op with no
+    per-pipeline dispatch. Lane i is pipeline i; the single-writer SPMD
+    discipline per lane keeps it lock-free exactly as before.
 """
 from __future__ import annotations
 
@@ -83,6 +94,40 @@ def pop(ring: Ring, k: int) -> Tuple[Ring, Any, jnp.ndarray]:
     rows = jax.tree.map(lambda buf: buf[idx], ring.data)
     valid = jnp.arange(k) < n
     return Ring(ring.data, ring.head + n, ring.tail, ring.cap), rows, valid
+
+
+# -- stacked multi-lane rings (one allocation for N pipelines) ---------------
+
+def make_rings(proto: Any, cap: int, lanes: int) -> Ring:
+    """Allocate `lanes` independent rings in one stacked Ring; rows match
+    `proto` (a pytree of per-row arrays)."""
+    data = jax.tree.map(
+        lambda a: jnp.zeros((lanes, cap) + tuple(a.shape), a.dtype), proto)
+    # head and tail must be distinct buffers: the fused dispatch donates the
+    # whole Ring, and XLA rejects donating one buffer through two arguments.
+    return Ring(data, jnp.zeros((lanes,), jnp.int32),
+                jnp.zeros((lanes,), jnp.int32), cap)
+
+
+def push_many(ring: Ring, rows: Any, n: jnp.ndarray) -> Ring:
+    """Append rows[i, :n[i]] to lane i, for all lanes at once.
+
+    `rows` leaves are (lanes, M, ...); `n` is (lanes,) int32. Slots beyond
+    n[i] are left untouched (masked merge), so lanes may carry different
+    occupancies through one fixed-shape call. Caller ensures M <= cap and
+    per-lane space >= n[i] (steady state in the executor: rings drain to
+    empty every round). The single-lane `push` vmapped over lanes — one
+    copy of the cursor/mask arithmetic.
+    """
+    return jax.vmap(push)(ring, rows, n)
+
+
+def pop_many(ring: Ring, k: int) -> Tuple[Ring, Any, jnp.ndarray]:
+    """Remove up to `k` rows from every lane: `pop` vmapped over lanes.
+    Returns (ring, rows, valid): rows leaves are (lanes, k, ...); valid is
+    (lanes, k) with rows beyond a lane's occupancy masked out (their content
+    is garbage)."""
+    return jax.vmap(lambda r: pop(r, k))(ring)
 
 
 def peek(ring: Ring, k: int) -> Tuple[Any, jnp.ndarray]:

@@ -1,0 +1,13 @@
+"""Version compatibility for Pallas TPU APIs.
+
+JAX has renamed the TPU lowering-parameter dataclass across releases:
+older releases expose ``pltpu.TPUCompilerParams``, newer ones
+``pltpu.CompilerParams``. All kernels import the name from here so a
+single site absorbs the drift.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

@@ -17,7 +17,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels import compat
 
 from repro.kernels import ref as _ref
 
@@ -44,7 +44,7 @@ def _call(kernel, words: jnp.ndarray, key: jnp.ndarray, out_w: int,
         ],
         out_specs=pl.BlockSpec((block_b, out_w), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, out_w), jnp.uint32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(words.astype(jnp.uint32), key.astype(jnp.uint32)[None, :])

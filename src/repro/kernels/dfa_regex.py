@@ -24,7 +24,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels import compat
 
 
 def _dfa_kernel(payload_ref, length_ref, tableT_ref, out_count_ref, match_ref, *,
@@ -77,7 +77,7 @@ def dfa_regex(payload: jnp.ndarray, length: jnp.ndarray, table: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, 1), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(payload_i, length2, tableT, out_count.astype(jnp.int32))

@@ -1,0 +1,45 @@
+"""Optional-hypothesis shim for the property-based tests.
+
+``hypothesis`` is not available in every environment this repo runs in.
+Importing it at module top used to kill *collection* of five test modules,
+losing their plain unit tests too. Test modules import ``given``,
+``settings`` and ``st`` from here instead: with hypothesis installed these
+are the real thing; without it, ``@given`` rewrites the test into a single
+skipped stub (and ``st``/``settings`` become inert placeholders), so the
+property tests SKIP while everything else in the module still runs.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                     # pragma: no cover
+    import functools
+
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for `st.<anything>(...)` and composite strategies at
+        decoration time; never actually draws."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _AnyStrategy()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            @functools.wraps(fn)
+            def stub(*a, **k):              # signature-free: no fixtures
+                pass
+            stub.__signature__ = __import__("inspect").Signature()
+            return pytest.mark.skip(reason="hypothesis not installed")(stub)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn

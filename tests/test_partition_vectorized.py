@@ -1,0 +1,163 @@
+"""Vectorized flow-granular partitioner vs a straightforward reference loop.
+
+The production partitioner (core.orchestrator.partition_assign) makes one
+decision per unique flow and scatters per-packet assignments with numpy. The
+reference here walks every packet of every flow one at a time with the plain
+§5.1.2 rules. Both must produce identical flow->pipeline assignments and
+identical TO state (flow table, spill table, loads) across random flow
+mixes, spill pressure, migration-halted flows, and inactive pipelines.
+"""
+import numpy as np
+import pytest
+
+from repro.apps.packets import synth_packets
+from repro.core.orchestrator import (ASSIGN_HALTED, TrafficOrchestrator,
+                                     flow_ids)
+
+
+def reference_partition_assign(to: TrafficOrchestrator, batch) -> np.ndarray:
+    """One-packet-at-a-time flow-granular walk — the semantics oracle."""
+    fids = flow_ids(batch)
+    for p in to.pipelines:
+        p.load = 0.0
+    assign = np.full(len(fids), -1, np.int64)
+    groups = {}
+    for i, f in enumerate(fids):                 # first-appearance order
+        groups.setdefault(int(f), []).append(i)
+    avail = {p.pid: (p.capacity if p.active else 0.0) for p in to.pipelines}
+    actives = [p.pid for p in to.pipelines if p.active]
+    for f, idxs in groups.items():
+        if f in to.halted_flows:
+            for i in idxs:
+                assign[i] = ASSIGN_HALTED
+            continue
+        if not actives:
+            raise ValueError("partition: no active pipelines")
+        home = to.flow_table.get(f)
+        for i in idxs:
+            pid = None
+            if home is not None and to.pipelines[home].active \
+                    and avail[home] >= 1.0:
+                pid = home
+            if pid is None:
+                for spid in to.spill_table.get(f, ()):
+                    if to.pipelines[spid].active and avail[spid] >= 1.0:
+                        pid = spid
+                        break
+            if pid is None:
+                pid = max(actives, key=lambda q: avail[q])
+                if avail[pid] < 1.0:             # everything saturated
+                    pid = max(actives, key=lambda q: to.pipelines[q].capacity)
+                if home is None:
+                    to.flow_table[f] = pid
+                    home = pid
+                elif pid != home:
+                    sp = to.spill_table.setdefault(f, [])
+                    if pid not in sp:
+                        sp.append(pid)
+            assign[i] = pid
+            avail[pid] = max(0.0, avail[pid] - 1.0)
+            to.pipelines[pid].load += 1.0
+    return assign
+
+
+def make_pair(pipes, cap):
+    return (TrafficOrchestrator(pipes, cap), TrafficOrchestrator(pipes, cap))
+
+
+def check_equal(to_v, to_r, batch):
+    got = to_v.partition_assign(batch)
+    want = reference_partition_assign(to_r, batch)
+    np.testing.assert_array_equal(got, want)
+    assert to_v.flow_table == to_r.flow_table
+    assert to_v.spill_table == to_r.spill_table
+    assert [p.load for p in to_v.pipelines] == \
+           pytest.approx([p.load for p in to_r.pipelines])
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("pipes,cap", [(1, 8), (2, 4), (4, 16), (6, 3),
+                                       (3, 17.5), (4, 1000.0)])
+def test_random_mixes_match_reference(seed, pipes, cap):
+    rng = np.random.default_rng(seed)
+    to_v, to_r = make_pair(pipes, cap)
+    for round_ in range(3):                       # state carries across rounds
+        batch = synth_packets(batch=int(rng.integers(1, 200)),
+                              num_flows=int(rng.integers(1, 40)),
+                              pkt_bytes=32, seed=seed * 10 + round_)
+        check_equal(to_v, to_r, batch)
+
+
+@pytest.mark.parametrize("B,flows", [(40, 1), (120, 2), (64, 5)])
+def test_spill_pressure_matches_reference(B, flows):
+    to_v, to_r = make_pair(4, 10)                 # heavy spill: 4x10 << B
+    batch = synth_packets(batch=B, num_flows=flows, pkt_bytes=32, seed=1)
+    check_equal(to_v, to_r, batch)
+    check_equal(to_v, to_r, batch)                # spill tables now populated
+
+
+def test_overload_path_matches_reference():
+    to_v, to_r = make_pair(3, 2)                  # total capacity 6 << B
+    batch = synth_packets(batch=50, num_flows=8, pkt_bytes=32, seed=2)
+    check_equal(to_v, to_r, batch)
+
+
+def test_halted_flows_match_reference():
+    batch = synth_packets(batch=60, num_flows=6, pkt_bytes=32, seed=3)
+    to_v, to_r = make_pair(3, 100)
+    check_equal(to_v, to_r, batch)
+    f = next(iter(to_v.flow_table))
+    to_v.begin_migration(f)
+    to_r.begin_migration(f)
+    got = to_v.partition_assign(batch)
+    want = reference_partition_assign(to_r, batch)
+    np.testing.assert_array_equal(got, want)
+    assert (got == ASSIGN_HALTED).sum() > 0
+    # the vectorized TO buffered exactly the halted packets
+    buffered = np.concatenate([s.indices for s in to_v.halted_flows[f]])
+    np.testing.assert_array_equal(np.sort(buffered),
+                                  np.nonzero(got == ASSIGN_HALTED)[0])
+
+
+def test_inactive_pipelines_match_reference():
+    batch = synth_packets(batch=80, num_flows=10, pkt_bytes=32, seed=4)
+    to_v, to_r = make_pair(4, 30)
+    check_equal(to_v, to_r, batch)
+    to_v.halt_pipeline(0)
+    to_r.halt_pipeline(0)
+    check_equal(to_v, to_r, batch)
+    assert all(p != 0 for p in
+               (to_v.partition_assign(batch)).tolist())
+
+
+def test_all_pipelines_inactive_raises():
+    to = TrafficOrchestrator(2, 8)
+    to.halt_pipeline(0)
+    to.halt_pipeline(1)
+    with pytest.raises(ValueError):
+        to.partition_assign(synth_packets(batch=4, num_flows=2, pkt_bytes=32))
+
+
+def test_all_halted_batch_buffers_even_without_active_pipelines():
+    """Scale-down mid-migration: a batch made only of halted-flow packets
+    must buffer, not crash, even when every pipeline is inactive."""
+    batch = synth_packets(batch=8, num_flows=2, pkt_bytes=32, seed=6)
+    to = TrafficOrchestrator(1, 100)
+    to.partition_assign(batch)
+    for f in list(to.flow_table):
+        to.begin_migration(f)
+    to.halt_pipeline(0)
+    assign = to.partition_assign(batch)
+    assert (assign == ASSIGN_HALTED).all()
+    assert sum(s.indices.size for b in to.halted_flows.values()
+               for s in b) == 8
+
+
+def test_partition_subs_still_partition_the_batch():
+    batch = synth_packets(batch=77, num_flows=9, pkt_bytes=32, seed=5)
+    to = TrafficOrchestrator(3, 20)
+    subs = to.partition(batch)
+    idx = np.concatenate([s.indices for s in subs])
+    assert sorted(idx.tolist()) == list(range(77))
+    seqs = [s.seq for s in subs]
+    assert len(set(seqs)) == len(seqs)
