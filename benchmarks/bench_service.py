@@ -1,0 +1,95 @@
+"""Meili-Serve resource-efficiency benchmark (ISSUE 2; paper §8, Fig 13).
+
+Runs the default 6-tenant mix through the deployment-mode comparator
+(pooled vs standalone vs microservice) under the bursty and diurnal
+scenarios, with one NIC failure injected into the pooled bursty run, and
+writes ``BENCH_service.json`` with the efficiency ratios, per-scenario
+per-tenant SLO compliance, and the failover record.
+
+Headline acceptance bars (checked by ``main`` and surfaced in the JSON):
+  pooled efficiency >= 2x standalone, >= 1.2x microservice, all tenant SLOs
+  pass under both scenarios, and the injected failure drops no tenant.
+
+Run headlessly:   PYTHONPATH=src python -m benchmarks.bench_service
+Smoke (CI) mode:  PYTHONPATH=src python -m benchmarks.bench_service --fast
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+from benchmarks.common import row
+from repro.service.efficiency import MODES, run_comparison
+from repro.service.runtime import RuntimeConfig
+
+TICKS = 120
+FAST_TICKS = 32
+
+BARS = {"pooled_vs_standalone": 2.0, "pooled_vs_microservice": 1.2}
+
+
+def run(emit=print, fast: bool = False, seed: int = 0) -> dict:
+    cfg = RuntimeConfig() if not fast else RuntimeConfig(
+        dataplane_every=0, max_sim_seqs=48)
+    res = run_comparison(ticks=FAST_TICKS if fast else TICKS, cfg=cfg,
+                         seed=seed)
+    for mode in MODES:
+        emit(row(f"service_eff_{mode}", 0,
+                 f"{res['efficiency'][mode]:.3f}Gbps_per_unit"))
+    for name, ratio in res["ratios"].items():
+        emit(row(f"service_{name}", 0,
+                 f"{ratio:.2f}x_bar{BARS[name]:.1f}x"))
+    for scenario, rec in res["scenarios"].items():
+        for mode in MODES:
+            emit(row(f"service_slo_{scenario}_{mode}", 0,
+                     f"pass={rec[mode]['slo_pass']}"))
+        if "failover" in rec:
+            fo = rec["failover"]
+            emit(row(f"service_failover_{scenario}", 0,
+                     f"nic={fo['failed_nic']}_alive={fo['tenants_alive_after']}"
+                     f"_survived={fo['survived']}"))
+    res["bars"] = BARS
+    res["pass"] = check(res)
+    return res
+
+
+def check(res: dict) -> bool:
+    ok = all(res["ratios"][k] >= bar for k, bar in BARS.items())
+    for rec in res["scenarios"].values():
+        ok = ok and all(rec[m]["slo_pass"] for m in MODES)
+        if "failover" in rec:
+            ok = ok and rec["failover"]["survived"]
+    return ok
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smoke mode: fewer ticks, analytic model only")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: repo-root BENCH_service.json)")
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    res = run(emit=print, fast=args.fast, seed=args.seed)
+    out = (pathlib.Path(args.out) if args.out else
+           pathlib.Path(__file__).resolve().parent.parent / "BENCH_service.json")
+    payload = {
+        "benchmark": "meili-serve deployment-mode comparison",
+        "fast": args.fast,
+        "seed": args.seed,
+        "ticks": FAST_TICKS if args.fast else TICKS,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        **res,
+    }
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {out}")
+    if not res["pass"]:
+        raise SystemExit("service benchmark below acceptance bars")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,53 +10,16 @@ quantity; EXPERIMENTS.md tags every number measured-here vs paper-reported.
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict
+from typing import Callable
 
 import jax
 
-from repro import hw
-
-# Calibrated per-stage, per-1500B-packet latencies (µs) on one resource unit
-# (ARM A72 core or accelerator engine). Derived from the paper's observable
-# aggregates: Fig 9 single-pipeline rates, Fig 2 bottleneck structure
-# (L7 Filter regex-bound, Malware Detection CPU-bound), §8.5 TO overhead.
-APP_STAGE_LATENCY_US: Dict[str, Dict[str, float]] = {
-    # Intrusion Detection [3 fn: CPU, regex]  (CPU-bound like Malware Det.;
-    # regex engine ~13 Gbps, matching Fig 2's L7-Filter regex bound)
-    "ID": {"flow_ext": 2.20, "dpi_regex": 0.92, "verdict": 1.80},
-    # IPComp Gateway [2 fn: CPU, compression]
-    "ICG": {"ipcomp_encap": 1.80, "compress": 2.10},
-    # IPsec Gateway [4 fn: CPU, regex, AES] — Listing 1
-    "ISG": {"ddos_check": 2.00, "url_check": 0.92, "ipsec_encap": 1.00,
-            "sha": 1.30, "aes": 1.90},
-    # Firewall [2 fn: CPU]  (Fig 9: ~25 Gbps @ 7 pipelines => ~3.7 Gbps each)
-    "FW": {"rule_match": 2.90, "conn_track": 3.20},
-    # Flow Monitor [2 fn: CPU]
-    "FM": {"flow_ext": 2.90, "flow_metrics": 3.20},
-    # L7 Load Balancer [socket]  (Fig 9: ~60 Gbps @ 7 => ~8.8 Gbps each)
-    "LLB": {"reg_sock": 0.20, "epoll_in": 1.36},
-}
-
-# Resource kind per stage (matches apps/nf.py definitions).
-APP_STAGE_RESOURCE: Dict[str, Dict[str, str]] = {
-    "ID": {"flow_ext": "cpu", "dpi_regex": "regex", "verdict": "cpu"},
-    "ICG": {"ipcomp_encap": "cpu", "compress": "compression"},
-    "ISG": {"ddos_check": "cpu", "url_check": "regex", "ipsec_encap": "cpu",
-            "sha": "crypto", "aes": "crypto"},
-    "FW": {"rule_match": "cpu", "conn_track": "cpu"},
-    "FM": {"flow_ext": "cpu", "flow_metrics": "cpu"},
-    "LLB": {"reg_sock": "cpu", "epoll_in": "cpu"},
-}
-
-PKT_BITS = hw.PKT_BYTES * 8.0
-# Remote hop penalty between stages on different NICs (paper §8.5: ~4.5 µs
-# round trip; Table 1 shows +3.75 µs avg for the distributed IPComp GW).
-HOP_US = 4.5
-
-
-def unit_gbps(lat_us: float) -> float:
-    """Throughput of one resource unit running a stage (1500 B packets)."""
-    return PKT_BITS / (lat_us * 1e-6) / 1e9
+# The calibrated cost model now lives in src (repro.apps.profiles) so the
+# service runtime can use it without importing benchmarks/; these names are
+# re-exported for the existing figure benchmarks.
+from repro.apps.profiles import (APP_STAGE_LATENCY_US,  # noqa: F401
+                                 APP_STAGE_RESOURCE, HOP_US, PKT_BITS,
+                                 unit_gbps)
 
 
 def timeit(fn: Callable, *args, iters: int = 10, warmup: int = 3) -> float:

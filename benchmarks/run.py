@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows. Mapping:
   bench_state        -> Fig 20 + App. C (state engine ops)
   bench_kernels      -> kernel hot-spots (µs/call + TPU roofline context)
   bench_dataplane    -> fused data-plane pps (ISSUE 1; writes BENCH_dataplane.json)
+  bench_service      -> Meili-Serve efficiency modes (ISSUE 2; writes BENCH_service.json)
 
 Run one module headlessly:   python -m benchmarks.bench_dataplane
 Run everything:              python -m benchmarks.run   (or: make bench)
@@ -19,7 +20,8 @@ import traceback
 
 from benchmarks import (bench_adaptive, bench_bandwidth, bench_dataplane,
                         bench_efficiency, bench_kernels, bench_pipeline,
-                        bench_redirection, bench_scalability, bench_state)
+                        bench_redirection, bench_scalability, bench_service,
+                        bench_state)
 
 ALL = [
     ("fig7_8", bench_pipeline),
@@ -31,6 +33,7 @@ ALL = [
     ("fig20", bench_state),
     ("kernels", bench_kernels),
     ("dataplane", bench_dataplane),
+    ("service", bench_service),
 ]
 
 

@@ -46,10 +46,20 @@ class Deployment:
     achievable_gbps: float
     backup_nic: Optional[str] = None
     state_snapshot: Optional[dict] = None
+    tenant: Optional[str] = None      # service-runtime owner (defaults to app name)
 
     def nics_used(self) -> List[str]:
         return [n for n, row in self.allocation.A.items()
                 if any(v > 0 for v in row.values())]
+
+    def usage(self) -> Dict[str, int]:
+        """Resource kind -> units currently held (for pool attribution)."""
+        need = self.app.resource_needs()
+        out: Dict[str, int] = {}
+        for s in self.profile.stages:
+            kind = need[s]
+            out[kind] = out.get(kind, 0) + self.allocation.units(s)
+        return out
 
 
 class ControllerAgent:
@@ -73,6 +83,24 @@ class MeiliController:
         self.state = StateService(list(pool.nics))
         self.clock = clock
         self.events: List[dict] = []    # controller action log (scaling/failover)
+        # Service-runtime hooks: callables fired with every event dict the
+        # controller logs (deploy/scale/failover/terminate), so a runtime
+        # layered on top can react (rebuild data planes, retry placement)
+        # without polling the event log.
+        self.hooks: List[Callable[[dict], None]] = []
+
+    def add_hook(self, fn: Callable[[dict], None]) -> None:
+        self.hooks.append(fn)
+
+    def _emit(self, event: dict) -> None:
+        self.events.append(event)
+        for fn in self.hooks:
+            fn(event)
+
+    def _account(self, dep: Deployment) -> None:
+        """Resync the pool's per-tenant usage ledger from the deployment's
+        current allocation (idempotent; called after every mutation)."""
+        self.pool.set_usage(dep.tenant or dep.app.name, dep.usage())
 
     # -- §6.1 demand calculation -------------------------------------------------
     def demand(self, profile: AppProfile, target_gbps: float
@@ -93,7 +121,8 @@ class MeiliController:
 
     # -- submission (Meili.app_sub_thr) -------------------------------------------
     def submit(self, app: MeiliApp, target_gbps: float, profile: AppProfile,
-               backup_nic: Optional[str] = None) -> Deployment:
+               backup_nic: Optional[str] = None,
+               tenant: Optional[str] = None) -> Deployment:
         R, r_s, t_R = self.demand(profile, target_gbps)
         need = app.resource_needs()
         alloc = resource_alloc(profile.stages, r_s, profile.t_s, self.pool, need)
@@ -110,16 +139,22 @@ class MeiliController:
         dep = Deployment(app=app, target_gbps=target_gbps, profile=profile,
                          R=R, r_s=placed, allocation=alloc,
                          num_pipelines=num_pipes, to=to,
-                         achievable_gbps=achievable, backup_nic=backup_nic)
+                         achievable_gbps=achievable, backup_nic=backup_nic,
+                         tenant=tenant or app.name)
         self.deployments[app.name] = dep
-        self.events.append({"t": self.clock(), "event": "deploy", "app": app.name,
-                            "target": target_gbps, "achievable": achievable})
+        self._account(dep)
+        self._emit({"t": self.clock(), "event": "deploy", "app": app.name,
+                    "tenant": dep.tenant, "target": target_gbps,
+                    "achievable": achievable})
         return dep
 
     def terminate(self, app_name: str) -> None:
         dep = self.deployments.pop(app_name)
         release(self.pool, dep.allocation, dep.app.resource_needs(),
                 dep.profile.t_s)
+        self.pool.clear_usage(dep.tenant or dep.app.name)
+        self._emit({"t": self.clock(), "event": "terminate",
+                    "app": app_name, "tenant": dep.tenant})
 
     # -- §6.1 adaptive scaling ------------------------------------------------------
     def adaptive_scale(self, app_name: str, new_target_gbps: float) -> Deployment:
@@ -162,9 +197,10 @@ class MeiliController:
         dep.target_gbps = new_target_gbps
         dep.achievable_gbps = self._achievable(dep.profile, dep.allocation,
                                                dep.r_s)
-        self.events.append({"t": self.clock(), "event": "scale", "app": app_name,
-                            "target": new_target_gbps,
-                            "response_s": self.clock() - t0})
+        self._account(dep)
+        self._emit({"t": self.clock(), "event": "scale", "app": app_name,
+                    "tenant": dep.tenant, "target": new_target_gbps,
+                    "response_s": self.clock() - t0})
         return dep
 
     def _shrink(self, dep: Deployment, give_back: Dict[str, int],
@@ -222,9 +258,10 @@ class MeiliController:
             if dep.state_snapshot:
                 for k, v in dep.state_snapshot.items():
                     self.state.fstate_set(k, v)
-            self.events.append({"t": self.clock(), "event": "failover",
-                                "app": name, "nic": nic, "unmet": unmet,
-                                "response_s": self.clock() - t0})
+            self._account(dep)
+            self._emit({"t": self.clock(), "event": "failover",
+                        "app": name, "tenant": dep.tenant, "nic": nic,
+                        "unmet": unmet, "response_s": self.clock() - t0})
         return impacted
 
     # -- CA synchronization (paper §3: periodic status sync) ------------------------

@@ -137,8 +137,19 @@ class ParallelDataPlane:
         # compiles = real XLA specializations of the shared dispatch program,
         # read off jax.jit's own cache (shape-key proxy as fallback on jax
         # versions without _cache_size). Steady state must show zero growth.
+        # by_tenant: per-tenant call/packet attribution when the caller (the
+        # service runtime) tags batches with the submitting tenant.
         self._shape_keys: set = set()
-        self.dispatch_stats = {"calls": 0, "compiles": 0}
+        self.dispatch_stats: Dict[str, Any] = {
+            "calls": 0, "compiles": 0, "by_tenant": {}}
+
+    def _tag_tenant(self, tenant: Optional[str], packets: int) -> None:
+        if tenant is None:
+            return
+        per = self.dispatch_stats["by_tenant"].setdefault(
+            tenant, {"calls": 0, "packets": 0})
+        per["calls"] += 1
+        per["packets"] += int(packets)
 
     def _jit_cache_size(self) -> Optional[int]:
         try:
@@ -173,9 +184,11 @@ class ParallelDataPlane:
             self._ring_proto_key = proto_key
 
     # -- partition -> fused dispatch -> aggregate ------------------------------
-    def process(self, batch: PacketBatch) -> PacketBatch:
+    def process(self, batch: PacketBatch,
+                tenant: Optional[str] = None) -> PacketBatch:
         assign = self.to.partition_assign(batch)
         proc = np.nonzero(assign >= 0)[0]      # halted-flow packets buffered
+        self._tag_tenant(tenant, proc.size)
         if proc.size == 0:
             return self._empty_result(batch)
         lanes_of = assign[proc]
@@ -237,11 +250,13 @@ class ParallelDataPlane:
         return out
 
     # -- unfused reference path (kept as the dispatch-layer oracle) ------------
-    def process_unfused(self, batch: PacketBatch) -> PacketBatch:
+    def process_unfused(self, batch: PacketBatch,
+                        tenant: Optional[str] = None) -> PacketBatch:
         """Per-sub-batch dispatch through PipelineRunner, then sequence-number
         aggregation — the pre-fusion data path, retained for A/B tests and
         benchmarks."""
         subs = self.to.partition(batch)
+        self._tag_tenant(tenant, sum(s.indices.size for s in subs))
         if not subs:                       # empty batch or every flow halted
             return self._empty_result(batch)
         done: List[SubBatch] = []

@@ -78,6 +78,11 @@ class Pool:
 
     def __init__(self, nics: List[NicSpec]):
         self.nics: Dict[str, NicState] = {s.name: NicState(spec=s) for s in nics}
+        # Per-tenant usage ledger (resource kind -> units currently held),
+        # maintained by the controller after every allocation mutation
+        # (deploy / scale / failover / terminate). It is attribution only:
+        # `free` above stays the single source of truth for capacity.
+        self.usage: Dict[str, Dict[str, int]] = {}
 
     def names(self) -> List[str]:
         return [n for n, st in self.nics.items() if st.alive]
@@ -102,6 +107,29 @@ class Pool:
         if tot == 0:
             return 0.0
         return 1.0 - self.free_total(resource) / tot
+
+    # -- per-tenant usage attribution (service runtime, ISSUE 2) --------------
+    def set_usage(self, tenant: str, usage: Dict[str, int]) -> None:
+        """Overwrite one tenant's attributed usage (controller resync)."""
+        usage = {r: int(n) for r, n in usage.items() if n > 0}
+        if usage:
+            self.usage[tenant] = usage
+        else:
+            self.usage.pop(tenant, None)
+
+    def clear_usage(self, tenant: str) -> None:
+        self.usage.pop(tenant, None)
+
+    def reserved_units(self, tenant: Optional[str] = None) -> int:
+        """Attributed units held by one tenant (or all tenants combined),
+        counting every resource kind — a core and an accelerator engine are
+        each one 'resource unit' in the paper's efficiency accounting."""
+        if tenant is not None:
+            return sum(self.usage.get(tenant, {}).values())
+        return sum(sum(u.values()) for u in self.usage.values())
+
+    def usage_snapshot(self) -> Dict[str, Dict[str, int]]:
+        return {t: dict(u) for t, u in self.usage.items()}
 
     def snapshot(self) -> Dict[str, Dict[str, float]]:
         """Controller-agent status sync (paper §3: CA <-> Meili Controller)."""

@@ -1,0 +1,17 @@
+"""Meili-Serve: the multi-tenant SmartNIC-as-a-Service runtime (ISSUE 2).
+
+Layers a service plane on top of the controller/pool/data-plane stack:
+
+  tenants.py     tenant registry + SLA model + admission control
+  workload.py    scenario-driven deterministic traffic generation
+  telemetry.py   per-tenant / per-NIC tick telemetry + SLO accounting
+  runtime.py     discrete-time service loop + closed-loop autoscaler
+  efficiency.py  pooled vs standalone vs microservice comparator (§8, Fig 13)
+"""
+
+from repro.service.tenants import (AdmissionError, TenantRegistry, TenantSLA,
+                                   TenantSpec, default_tenant_mix)
+from repro.service.workload import SCENARIOS, ScenarioWorkload, TrafficSpec
+from repro.service.telemetry import TelemetryLog, TenantTick
+from repro.service.runtime import RuntimeConfig, ServiceRuntime
+from repro.service.efficiency import MODES, run_comparison

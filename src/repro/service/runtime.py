@@ -1,0 +1,263 @@
+"""The discrete-time service loop + closed-loop autoscaler (Meili-Serve).
+
+Each tick the runtime:
+
+  1. handles tenant churn (admissions due this tick, departures, rejected
+     admissions are logged and retried never — strict admission control);
+  2. injects a NIC failure if one is scheduled, driving the controller's
+     Appendix-D failover; impacted tenants get a re-place retry and a short
+     SLO grace window;
+  3. per active tenant: reads the tick's offered load, runs the autoscaler
+     (the paper's §8.4 scale response is milliseconds — below one tick — so
+     scaling acts within the tick it is decided), optionally pushes a
+     representative PacketBatch through the tenant's fused ParallelDataPlane
+     (tagged with the tenant for dispatch-stats attribution), and records
+     telemetry from the calibrated latency model;
+  4. snapshots cluster-level reserved units + utilization, and periodically
+     replicates state to backup NICs (Appendix D).
+
+The autoscaler is fast-attack / slow-decay: demand estimates jump to the
+observed offered rate instantly but decay with EWMA smoothing, and the
+provision target is clamped to [floor_frac * contract, contract] with
+multiplicative headroom. Scaling calls go through the controller's
+``adaptive_scale`` (Algorithm 1 demand recompute + incremental placement).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+import jax
+
+from repro.core.controller import MeiliController
+from repro.core.executor import ParallelDataPlane
+from repro.service.tenants import AdmissionError, TenantRegistry
+from repro.service.telemetry import (ClusterTick, TelemetryLog, TenantTick,
+                                     measure_tenant_tick)
+from repro.service.workload import ScenarioWorkload
+
+
+@dataclasses.dataclass
+class RuntimeConfig:
+    dt_s: float = 0.05                # simulated tick duration
+    autoscale: bool = True
+    headroom: float = 1.15            # provision = demand-estimate * headroom
+    decay: float = 0.45               # EWMA decay on the way down
+    floor_frac: float = 0.2           # never scale below floor_frac * contract
+    rescale_threshold: float = 0.1    # relative gap that triggers a scale call
+    scale_cooldown_ticks: int = 2
+    dataplane_every: int = 1          # run the fused data plane every N ticks (0 = off)
+    max_pkts_per_tick: int = 192
+    pkt_bytes: int = 192
+    replicate_every: int = 8          # Appendix-D replication cadence
+    slo_tol: float = 0.1              # achieved >= (1-tol) * min(offered, contract)
+    slo_grace_ticks: int = 3          # post-failover grace window
+    warmup_ticks: int = 2
+    max_violation_frac: float = 0.05
+    max_sim_seqs: int = 96
+
+
+class ServiceRuntime:
+    def __init__(self, controller: MeiliController, registry: TenantRegistry,
+                 workload: ScenarioWorkload,
+                 cfg: Optional[RuntimeConfig] = None):
+        self.ctrl = controller
+        self.registry = registry
+        self.workload = workload
+        self.cfg = cfg or RuntimeConfig()
+        self.telemetry = TelemetryLog()
+        self.tick_now = 0
+        self._planes: Dict[str, ParallelDataPlane] = {}
+        # Dispatch attribution carried across plane rebuilds (scale/failover
+        # drops a tenant's plane; its counters must not vanish with it).
+        self._dp_stats: Dict[str, Dict[str, int]] = {}
+        self._demand: Dict[str, float] = {}      # EWMA demand estimate
+        self._cooldown: Dict[str, int] = {}
+        self._backlog: Dict[str, float] = {}
+        self._grace_until: Dict[str, int] = {}
+        self._force_rescale: Set[str] = set()
+        self._events: Dict[str, str] = {}        # tenant -> event this tick
+        controller.add_hook(self._on_event)
+
+    # -- controller feedback ---------------------------------------------------
+    def _on_event(self, ev: dict) -> None:
+        tenant = ev.get("tenant") or ev.get("app")
+        if tenant is None:
+            return
+        if ev["event"] in ("scale", "failover"):
+            # Placement changed: the tenant's data plane is rebuilt lazily
+            # with the new pipeline count (compiled programs are shared
+            # process-wide, so this is cheap).
+            self._drop_plane(tenant)
+            self._events[tenant] = ev["event"]
+        if ev["event"] == "failover":
+            self._grace_until[tenant] = self.tick_now + self.cfg.slo_grace_ticks
+            self._force_rescale.add(tenant)
+
+    def _drop_plane(self, tenant: str) -> None:
+        dp = self._planes.pop(tenant, None)
+        if dp is None:
+            return
+        for t, per in dp.dispatch_stats.get("by_tenant", {}).items():
+            acc = self._dp_stats.setdefault(t, {"calls": 0, "packets": 0})
+            acc["calls"] += per["calls"]
+            acc["packets"] += per["packets"]
+
+    def dataplane_stats(self) -> Dict[str, Dict[str, int]]:
+        """Per-tenant dispatch attribution over the whole run: accumulated
+        counters of dropped planes plus the live ones."""
+        out = {t: dict(v) for t, v in self._dp_stats.items()}
+        for dp in self._planes.values():
+            for t, per in dp.dispatch_stats.get("by_tenant", {}).items():
+                acc = out.setdefault(t, {"calls": 0, "packets": 0})
+                acc["calls"] += per["calls"]
+                acc["packets"] += per["packets"]
+        return out
+
+    def _plane(self, tenant: str) -> ParallelDataPlane:
+        dp = self._planes.get(tenant)
+        if dp is None:
+            dep = self.registry.deployment(tenant)
+            cap = self.ctrl._pipeline_capacity(dep.profile, dep.num_pipelines)
+            dp = ParallelDataPlane(dep.app, num_pipelines=dep.num_pipelines,
+                                   capacity_per_pipeline=cap)
+            self._planes[tenant] = dp
+        return dp
+
+    # -- closed-loop autoscaler ------------------------------------------------
+    def _autoscale(self, tenant: str, offered: float) -> None:
+        spec = self.registry.specs[tenant]
+        dep = self.registry.deployment(tenant)
+        prev = self._demand.get(tenant, offered)
+        est = offered if offered >= prev else (
+            (1.0 - self.cfg.decay) * prev + self.cfg.decay * offered)
+        self._demand[tenant] = est
+        if not self.cfg.autoscale:
+            return
+        contract = spec.sla.target_gbps
+        desired = min(contract, max(self.cfg.floor_frac * contract,
+                                    est * self.cfg.headroom))
+        cooldown = self._cooldown.get(tenant, 0)
+        forced = tenant in self._force_rescale
+        gap = abs(desired - dep.target_gbps) / max(contract, 1e-9)
+        # Capacity pressure: offered load is eating into the *placed*
+        # capacity (demand-granular targets can sit below the next placement
+        # step) — re-target above the offered rate before backlog builds.
+        pressure = offered > 0.92 * dep.achievable_gbps
+        if pressure:
+            desired = min(contract, max(desired, offered * self.cfg.headroom))
+        # Fast-attack: scale-UP is never blocked by the cooldown (a blocked
+        # scale-up is an SLO violation waiting to happen); the cooldown only
+        # rate-limits scale-downs so troughs don't thrash the allocator.
+        scaling_up = desired > dep.target_gbps + 1e-9
+        if forced or (scaling_up and (pressure
+                                      or gap > self.cfg.rescale_threshold)) \
+                or (not scaling_up and cooldown <= 0
+                    and gap > self.cfg.rescale_threshold):
+            self.ctrl.adaptive_scale(tenant, desired)
+            self._cooldown[tenant] = self.cfg.scale_cooldown_ticks
+            self._force_rescale.discard(tenant)
+        else:
+            self._cooldown[tenant] = cooldown - 1
+
+    # -- failure injection -----------------------------------------------------
+    def inject_failure(self, nic: Optional[str] = None) -> Tuple[str, List[str]]:
+        """Fail one NIC (the busiest allocated one if unspecified) and run the
+        controller's Appendix-D failover."""
+        if nic is None:
+            load: Dict[str, int] = {}
+            for dep in self.ctrl.deployments.values():
+                for n, row in dep.allocation.A.items():
+                    if self.ctrl.pool[n].alive:
+                        load[n] = load.get(n, 0) + sum(row.values())
+            if not load:
+                raise ValueError("inject_failure: no allocated NICs")
+            nic = max(load, key=load.get)
+        impacted = self.ctrl.handle_failure(nic)
+        return nic, impacted
+
+    # -- churn -----------------------------------------------------------------
+    def _churn(self, tick: int) -> None:
+        for name in self.registry.departing(tick):
+            self.registry.evict(name)
+            self._drop_plane(name)
+            self._events[name] = "depart"
+        for name in self.registry.pending(tick):
+            try:
+                self.registry.admit(name)
+                self._events[name] = "admit"
+            except AdmissionError:
+                self._events[name] = "admission_rejected"
+
+    # -- the loop --------------------------------------------------------------
+    def run(self, num_ticks: int,
+            fail_at: Optional[Tuple[int, Optional[str]]] = None
+            ) -> TelemetryLog:
+        cfg = self.cfg
+        for _ in range(num_ticks):
+            tick = self.tick_now
+            self._churn(tick)
+            if fail_at is not None and tick == fail_at[0]:
+                nic, _ = self.inject_failure(fail_at[1])
+
+            cluster_achieved = 0.0
+            for tenant in self.registry.active():
+                if tenant not in self.workload.specs:
+                    continue
+                spec = self.registry.specs[tenant]
+                offered = self.workload.offered_gbps(tenant, tick)
+                self._autoscale(tenant, offered)
+                dep = self.registry.deployment(tenant)
+
+                if cfg.dataplane_every and tick % cfg.dataplane_every == 0:
+                    batch = self.workload.batch_for(
+                        tenant, tick, max_pkts=cfg.max_pkts_per_tick,
+                        pkt_bytes=cfg.pkt_bytes)
+                    if batch is not None:
+                        jax.block_until_ready(
+                            self._plane(tenant).process(batch, tenant=tenant))
+
+                p50, p99, achieved, backlog = measure_tenant_tick(
+                    dep, offered, cfg.dt_s,
+                    self._backlog.get(tenant, 0.0), cfg.max_sim_seqs)
+                self._backlog[tenant] = backlog
+                cluster_achieved += achieved
+
+                expect = min(offered, spec.sla.target_gbps)
+                slo_ok = (achieved >= (1.0 - cfg.slo_tol) * expect
+                          and p99 <= spec.sla.p99_latency_s)
+                in_grace = tick < self._grace_until.get(tenant, -1)
+                self.telemetry.record(TenantTick(
+                    tick=tick, tenant=tenant, offered_gbps=offered,
+                    achieved_gbps=achieved, p50_s=p50, p99_s=p99,
+                    units=self.ctrl.pool.reserved_units(tenant),
+                    slo_ok=slo_ok, in_grace=in_grace,
+                    event=self._events.pop(tenant, "")))
+
+                if (spec.backup_nic is not None
+                        and cfg.replicate_every
+                        and tick % cfg.replicate_every == 0):
+                    self.ctrl.replicate_for_failover(tenant)
+
+            self.telemetry.record_cluster(ClusterTick(
+                tick=tick, reserved_units=self.ctrl.pool.reserved_units(),
+                achieved_gbps=cluster_achieved,
+                nic_util={r: self.ctrl.pool.utilization(r)
+                          for r in ("cpu", "regex", "crypto", "compression")}))
+            self._events.clear()
+            self.tick_now += 1
+        return self.telemetry
+
+    # -- liveness --------------------------------------------------------------
+    def alive_tenants(self) -> List[str]:
+        """Tenants whose every stage still has at least one placed unit."""
+        out = []
+        for name in self.registry.active():
+            dep = self.registry.deployment(name)
+            if all(dep.allocation.units(s) >= 1 for s in dep.profile.stages):
+                out.append(name)
+        return out
+
+    def slo_report(self) -> Dict[str, dict]:
+        return self.telemetry.slo_report(self.cfg.warmup_ticks,
+                                         self.cfg.max_violation_frac)

@@ -1,0 +1,150 @@
+"""Tenant model, SLAs, and admission control (Meili-Serve).
+
+A *tenant* is one customer of the NIC-pool service: an application chain
+(``MeiliApp``), an offline profile, and an SLA (contracted peak throughput,
+p99 latency SLO, priority). The registry routes admissions through
+``MeiliController.submit`` — Algorithm 1 derives replication, Algorithm 2/3
+place units — and enforces strict admission: a tenant whose contracted peak
+cannot be placed is rolled back and rejected rather than silently degraded
+(the paper's FCFS submission model, §6.1, with priority classes layered on
+top: higher priority admits first; FCFS within a class).
+
+``default_tenant_mix`` is the 6-tenant evaluation mix (one tenant per paper
+app, Appendix F) used by the resource-efficiency benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.apps.nf import ALL_APPS
+from repro.apps.profiles import paper_profile
+from repro.core.controller import Deployment, MeiliController
+from repro.core.graph import MeiliApp
+from repro.core.profiler import AppProfile
+
+
+class AdmissionError(RuntimeError):
+    """Raised when a tenant's contracted target cannot be placed."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSLA:
+    target_gbps: float            # contracted peak throughput
+    p99_latency_s: float          # latency SLO on the sim-model p99
+    priority: int = 1             # higher admits first (FCFS within a class)
+
+
+@dataclasses.dataclass
+class TenantSpec:
+    name: str
+    app: MeiliApp
+    profile: AppProfile
+    sla: TenantSLA
+    backup_nic: Optional[str] = None   # Appendix-D failover replication target
+    arrive_tick: int = 0               # churn: when the tenant shows up
+    depart_tick: Optional[int] = None  # churn: when it leaves (None = never)
+
+
+class TenantRegistry:
+    """Catalog of tenants + admission control over one MeiliController."""
+
+    def __init__(self, controller: MeiliController):
+        self.controller = controller
+        self.specs: Dict[str, TenantSpec] = {}
+        self.admitted: Dict[str, Deployment] = {}
+        self.rejected: Dict[str, str] = {}    # tenant -> reason
+
+    def register(self, spec: TenantSpec) -> None:
+        if spec.name in self.specs:
+            raise ValueError(f"tenant {spec.name} already registered")
+        # Deployments are keyed by app name; give every tenant its own key so
+        # two tenants may run the same application independently.
+        spec.app.name = spec.name
+        self.specs[spec.name] = spec
+
+    def admit(self, name: str, strict: bool = True) -> Deployment:
+        spec = self.specs[name]
+        if name in self.admitted:
+            return self.admitted[name]
+        dep = self.controller.submit(spec.app, spec.sla.target_gbps,
+                                     spec.profile, backup_nic=spec.backup_nic,
+                                     tenant=name)
+        if strict and not dep.allocation.satisfied():
+            unmet = dict(dep.allocation.unmet)
+            self.controller.terminate(spec.app.name)
+            self.rejected[name] = f"unplaceable at contract: {unmet}"
+            raise AdmissionError(f"{name}: {self.rejected[name]}")
+        self.admitted[name] = dep
+        return dep
+
+    def admit_all(self, strict: bool = True) -> List[str]:
+        """Admit every registered tenant due at tick 0, highest priority
+        first (FCFS within a priority class = registration order)."""
+        out = []
+        for name in self.pending(tick=0):
+            try:
+                self.admit(name, strict=strict)
+                out.append(name)
+            except AdmissionError:
+                pass
+        return out
+
+    def evict(self, name: str) -> None:
+        if name in self.admitted:
+            self.controller.terminate(name)
+            del self.admitted[name]
+
+    def pending(self, tick: int) -> List[str]:
+        """Registered, not yet admitted/rejected, due to arrive by `tick`."""
+        due = [n for n, s in self.specs.items()
+               if n not in self.admitted and n not in self.rejected
+               and s.arrive_tick <= tick
+               and (s.depart_tick is None or s.depart_tick > tick)]
+        return sorted(due, key=lambda n: (-self.specs[n].sla.priority,
+                                          list(self.specs).index(n)))
+
+    def departing(self, tick: int) -> List[str]:
+        return [n for n in self.admitted
+                if self.specs[n].depart_tick is not None
+                and self.specs[n].depart_tick <= tick]
+
+    def active(self) -> List[str]:
+        return list(self.admitted)
+
+    def deployment(self, name: str) -> Deployment:
+        return self.controller.deployments[name]
+
+
+# -- the default 6-tenant evaluation mix --------------------------------------
+
+# (app key, contract Gbps, p99 SLO, priority). Contracts are sized so the mix
+# comfortably multiplexes onto the paper cluster in pooled mode while the
+# standalone mode must dedicate most of the rack (ISG alone pins one BF-2 for
+# regex plus two Pensandos for sha+aes).
+DEFAULT_MIX = (
+    ("ID", 8.0, 400e-6, 2),
+    ("ICG", 8.0, 400e-6, 1),
+    ("ISG", 5.0, 600e-6, 2),
+    ("FW", 10.0, 600e-6, 1),
+    ("FM", 8.0, 600e-6, 1),
+    ("LLB", 12.0, 300e-6, 2),
+)
+
+BACKUP_NICS = ("bf1-0", "bf1-1", "bf1-2", "bf1-3")
+
+
+def default_tenant_mix(impl: Optional[str] = "ref") -> List[TenantSpec]:
+    apps = ALL_APPS(impl=impl)
+    mix = []
+    for i, (key, gbps, p99, prio) in enumerate(DEFAULT_MIX):
+        mix.append(TenantSpec(
+            name=f"t-{key.lower()}", app=apps[key],
+            profile=paper_profile(key),
+            sla=TenantSLA(target_gbps=gbps, p99_latency_s=p99, priority=prio),
+            backup_nic=BACKUP_NICS[i % len(BACKUP_NICS)]))
+    return mix
+
+
+def contracts(mix: List[TenantSpec]) -> Dict[str, float]:
+    return {s.name: s.sla.target_gbps for s in mix}

@@ -1,8 +1,4 @@
 """Test config. NOTE: no XLA_FLAGS here — smoke tests and benches must see
 the real device count (1 CPU); only launch/dryrun.py forces 512 host devices,
-and the small dry-run test isolates its 8-device flag in a subprocess."""
-import pytest
-
-
-def pytest_configure(config):
-    config.addinivalue_line("markers", "slow: long-running integration test")
+and the small dry-run test isolates its 8-device flag in a subprocess.
+The `slow` marker is registered (and excluded by default) in pytest.ini."""

@@ -73,6 +73,41 @@ def test_failover_replaces_lost_units():
     assert any(e["event"] == "failover" for e in ctrl.events)
 
 
+def test_failover_meets_recomputed_targets_and_restores_state():
+    """Appendix D end-to-end: after handle_failure the surviving placement
+    must still meet the deployment's target, every stage must keep >= its
+    pre-failure unit count, and state that lived ONLY on the failed NIC must
+    be reachable from every surviving NIC via the replicated snapshot."""
+    ctrl = make_ctrl()
+    app, prof = isg_profile()
+    app.declare_state("isg_sa_table", "full-access")
+    dep = ctrl.submit(app, target_gbps=5.0, profile=prof, backup_nic="bf1-0")
+    units_before = {s: dep.allocation.units(s) for s in prof.stages}
+
+    victim = dep.allocation.nics_for("aes")[0]
+    # State written only on the soon-to-fail NIC (non-external-write style),
+    # then the periodic Appendix-D replication snapshots it to the backup.
+    ctrl.state.ne_set("isg_sa_table", 0xC0FFEE, local=victim)
+    ctrl.replicate_for_failover(app.name)
+    assert dep.state_snapshot == {"isg_sa_table": 0xC0FFEE}
+
+    ctrl.handle_failure(victim)
+    dep2 = ctrl.deployments[app.name]
+    # the recomputed placement fully replaces the lost units...
+    failover_ev = [e for e in ctrl.events if e["event"] == "failover"][-1]
+    assert failover_ev["unmet"] == {}
+    for s in prof.stages:
+        assert dep2.allocation.units(s) >= units_before[s], s
+        assert victim not in dep2.allocation.nics_for(s), s
+    # ...and still meets the target
+    assert dep2.achievable_gbps >= dep2.target_gbps
+    # migrated units can reach the restored state from every surviving NIC
+    for nic in ctrl.pool.names():
+        assert ctrl.state.get("isg_sa_table", local=nic) == 0xC0FFEE
+    # tenant accounting reflects the post-failover allocation
+    assert ctrl.pool.usage_snapshot()[app.name] == dep2.usage()
+
+
 def test_terminate_reclaims_resources():
     ctrl = make_ctrl()
     app, prof = isg_profile()

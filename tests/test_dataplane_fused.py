@@ -100,6 +100,40 @@ def test_replicas_share_compiled_programs():
     assert stage_runner(app.stages[0]) is runners[0].executors[0].run
 
 
+def test_multi_deployment_shared_stage_identity_no_double_compile():
+    """Two *deployments* whose apps are built from the same Function objects
+    (same stage identities) must share the process-wide compiled programs:
+    the second data plane's dispatch_stats must show zero fresh compiles for
+    shapes the first one already ran (multi-tenant service case)."""
+    from repro.core.graph import MeiliApp
+
+    app1 = ALL_APPS(impl="ref")["FW"]
+    app2 = MeiliApp("fw-tenant-b")          # a second deployment of the same
+    app2.stages = list(app1.stages)         # stage chain (shared identities)
+
+    dp1 = ParallelDataPlane(app1, num_pipelines=3, capacity_per_pipeline=64)
+    dp1.process(PKTS, tenant="tenant-a")
+    assert dp1.dispatch_stats["compiles"] == 1
+
+    dp2 = ParallelDataPlane(app2, num_pipelines=3, capacity_per_pipeline=64)
+    # identical stage identities -> the SAME fused dispatch program object
+    assert dp2._dispatch is dp1._dispatch
+    assert chain_runner(app2) is chain_runner(app1)
+    dp2.process(PKTS, tenant="tenant-b")
+    assert dp2.dispatch_stats["calls"] == 1
+    assert dp2.dispatch_stats["compiles"] == 0      # no double-compile
+    # per-tenant attribution stays per-plane and per-tenant
+    assert dp1.dispatch_stats["by_tenant"] == {
+        "tenant-a": {"calls": 1, "packets": PKTS.batch}}
+    assert dp2.dispatch_stats["by_tenant"] == {
+        "tenant-b": {"calls": 1, "packets": PKTS.batch}}
+
+    # a *different* stage identity (fresh UCF closures) does NOT collide
+    app3 = ALL_APPS(impl="ref")["FW"]
+    dp3 = ParallelDataPlane(app3, num_pipelines=3, capacity_per_pipeline=64)
+    assert dp3._dispatch is not dp1._dispatch
+
+
 # -- stacked multi-lane rings -------------------------------------------------
 
 def test_push_pop_many_fifo_and_wraparound():

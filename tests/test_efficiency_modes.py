@@ -1,0 +1,84 @@
+"""Deployment-mode comparator: pooled vs standalone vs microservice, the
+acceptance ratios, and the bench_service smoke path."""
+import json
+
+import pytest
+
+from repro.core.pool import CPU, paper_cluster
+from repro.service.efficiency import (MODES, provision_standalone,
+                                      run_comparison)
+from repro.service.runtime import RuntimeConfig
+from repro.service.tenants import default_tenant_mix
+
+FAST = RuntimeConfig(dataplane_every=0, max_sim_seqs=32)
+
+
+@pytest.fixture(scope="module")
+def comparison():
+    return run_comparison(ticks=40, cfg=FAST, seed=0)
+
+
+def test_efficiency_ratios_meet_paper_bars(comparison):
+    r = comparison["ratios"]
+    assert r["pooled_vs_standalone"] >= 2.0, r
+    assert r["pooled_vs_microservice"] >= 1.2, r
+
+
+def test_all_slos_pass_in_every_mode(comparison):
+    for scenario, rec in comparison["scenarios"].items():
+        for mode in MODES:
+            assert rec[mode]["slo_pass"], (scenario, mode, rec[mode]["slo"])
+
+
+def test_failover_drops_no_tenant(comparison):
+    fo = comparison["scenarios"]["bursty"]["failover"]
+    assert fo["survived"]
+    assert fo["tenants_alive_after"] == len(comparison["tenants"])
+    assert fo["failed_nic"] is not None
+    assert fo["impacted"]          # the busiest NIC hosted someone
+
+
+def test_reserved_ordering(comparison):
+    # standalone pays whole NICs; microservice pays fixed peak; pooled
+    # breathes below both.
+    for rec in comparison["scenarios"].values():
+        pooled = rec["pooled"]["reserved_units_mean"]
+        micro = rec["microservice"]["reserved_units_mean"]
+        alone = rec["standalone"]["reserved_units_mean"]
+        assert pooled < micro < alone
+
+
+def test_standalone_provisioner_covers_resource_kinds():
+    inventory = [st.spec for st in paper_cluster().nics.values()]
+    isg = next(s for s in default_tenant_mix() if s.name == "t-isg")
+    ctrl, taken = provision_standalone(isg, inventory)
+    dep = ctrl.deployments["t-isg"]
+    assert dep.allocation.satisfied()
+    kinds_needed = {r for r in isg.app.resource_needs().values() if r != CPU}
+    kinds_have = {k for n in taken for k, c in n.accelerators.items() if c > 0}
+    assert kinds_needed <= kinds_have
+    # the mixed accel demand (regex + crypto) forces a multi-NIC dedication
+    assert len(taken) >= 2
+
+
+def test_standalone_provisioner_handles_exhausted_inventory():
+    isg = next(s for s in default_tenant_mix() if s.name == "t-isg")
+    ctrl, taken = provision_standalone(isg, [])
+    assert taken == []
+    dep = ctrl.deployments["t-isg"]      # deployment exists, fully unmet
+    assert not dep.allocation.satisfied()
+    assert dep.achievable_gbps == 0.0
+
+
+def test_bench_service_fast_writes_json(tmp_path, capsys):
+    from benchmarks import bench_service
+    out = tmp_path / "BENCH_service.json"
+    bench_service.main(["--fast", "--out", str(out)])
+    payload = json.loads(out.read_text())
+    assert payload["pass"] is True
+    assert payload["fast"] is True
+    assert set(payload["efficiency"]) == set(MODES)
+    assert payload["ratios"]["pooled_vs_standalone"] >= 2.0
+    assert payload["ratios"]["pooled_vs_microservice"] >= 1.2
+    rows = capsys.readouterr().out
+    assert "service_eff_pooled" in rows
