@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-slow bench bench-dataplane bench-service
+.PHONY: test test-slow bench bench-dataplane bench-service bench-defrag
 
 # Tier-1 suite. pytest.ini excludes `slow` tests by default (the small
 # dry-run compiles a full train step and can take minutes), so this can
@@ -24,3 +24,8 @@ bench-dataplane:
 # (`--fast` variant is exercised inside `make test` as a smoke check.)
 bench-service:
 	python -m benchmarks.bench_service
+
+# Churn-heavy defragmentation A/B only (locality decay vs recovery);
+# merges the `defrag` record into BENCH_service.json.
+bench-defrag:
+	python -m benchmarks.bench_service --scenario churn

@@ -24,8 +24,10 @@ import time
 from typing import Callable, Dict, List, Optional
 
 from repro.core import allocation as alloc_mod
+from repro.core import defrag as defrag_mod
 from repro.core import replication
-from repro.core.allocation import Allocation, commit, release, resource_alloc
+from repro.core.allocation import (Allocation, commit, nic_charge, release,
+                                   resource_alloc)
 from repro.core.graph import MeiliApp
 from repro.core.orchestrator import TrafficOrchestrator
 from repro.core.pool import Pool
@@ -172,11 +174,7 @@ class MeiliController:
             extra = resource_alloc(dep.profile.stages, grow, dep.profile.t_s,
                                    self.pool, need)
             commit(self.pool, extra, need)
-            for n, row in extra.A.items():
-                for s, u in row.items():
-                    dep.allocation.A.setdefault(n, {})[s] = \
-                        dep.allocation.A.get(n, {}).get(s, 0) + u
-            dep.allocation.bw_after.update(extra.bw_after)
+            dep.allocation.merge(extra)
         if any(d < 0 for d in delta.values()):
             self._shrink(dep, {s: -d for s, d in delta.items() if d < 0}, need)
 
@@ -188,11 +186,24 @@ class MeiliController:
         for p in dep.to.pipelines:
             p.capacity = cap
         if len([p for p in dep.to.pipelines if p.active]) > new_pipes:
+            # Halt the surplus pipelines and spread their flows across the
+            # least-loaded survivors (funnelling everything to pipeline 0
+            # hot-spots it on every scale-down).
             for p in dep.to.pipelines[new_pipes:]:
                 if p.active:
-                    for f in dep.to.halt_pipeline(p.pid):
-                        dep.to.begin_migration(f)
-                        dep.to.finish_migration(f, dst_pid=0)
+                    dep.to.halt_pipeline(p.pid)
+            survivors = [p.pid for p in dep.to.pipelines if p.active]
+            flow_count = {pid: 0 for pid in survivors}
+            for f, pid in dep.to.flow_table.items():
+                if pid in flow_count:
+                    flow_count[pid] += 1
+            for f, pid in list(dep.to.flow_table.items()):
+                if pid in flow_count:
+                    continue   # still on a surviving pipeline
+                dst = min(survivors, key=lambda q: (flow_count[q], q))
+                dep.to.begin_migration(f)
+                dep.to.finish_migration(f, dst_pid=dst)
+                flow_count[dst] += 1
         dep.num_pipelines = new_pipes
         dep.target_gbps = new_target_gbps
         dep.achievable_gbps = self._achievable(dep.profile, dep.allocation,
@@ -205,20 +216,49 @@ class MeiliController:
 
     def _shrink(self, dep: Deployment, give_back: Dict[str, int],
                 need: Dict[str, str]) -> None:
-        for s, n in give_back.items():
-            left = n
-            for nic, row in dep.allocation.A.items():
+        """Return units to the pool, mirroring the Algorithm-3 colocation
+        credit on the way out: the bandwidth credited back is the canonical
+        charge *delta* of the shrunk row (capped by what this deployment
+        actually holds on the NIC), never the naive per-unit sum. Removing a
+        stage that a colocated successor was crediting can make the row's
+        charge go UP (the hand-off now crosses the link again) — that case
+        takes the extra bandwidth from the pool instead of crediting."""
+        alloc = dep.allocation
+        t_s = dep.profile.t_s
+        S = dep.profile.stages
+        for s, cnt in give_back.items():
+            left = cnt
+            for nic, row in alloc.A.items():
                 if left <= 0:
                     break
                 have = row.get(s, 0)
                 take = min(have, left)
-                if take > 0:
-                    row[s] = have - take
-                    self.pool[nic].give(need[s], take)
-                    self.pool[nic].free_bw_gbps = min(
-                        self.pool[nic].free_bw_gbps + take * dep.profile.t_s[s],
-                        self.pool[nic].spec.bandwidth_gbps)
-                    left -= take
+                if take <= 0:
+                    continue
+                charge_before = nic_charge(row, S, t_s)
+                row[s] = have - take
+                charge_after = nic_charge(row, S, t_s)
+                self.pool[nic].give(need[s], take)
+                held = alloc.bw_charge.get(nic, 0.0)
+                delta = charge_before - charge_after
+                if delta > 0.0:
+                    credit = min(delta, held)
+                    self.pool[nic].give_bw(credit)
+                    alloc.bw_charge[nic] = held - credit
+                elif delta < 0.0:
+                    extra = min(-delta, self.pool[nic].free_bw_gbps)
+                    self.pool[nic].take_bw(extra)
+                    alloc.bw_charge[nic] = held + extra
+                left -= take
+        # Resync the allocator's view with pool truth: no zero-unit rows, no
+        # stale bw_after — a later resource_alloc + commit must see reality.
+        for nic in list(alloc.A):
+            row = alloc.A[nic]
+            for s in [k for k, u in row.items() if u <= 0]:
+                del row[s]
+            if alloc.bw_charge.get(nic, 0.0) <= 1e-12:
+                alloc.bw_charge.pop(nic, None)
+            alloc.bw_after[nic] = self.pool[nic].free_bw_gbps
 
     # -- Appendix D: failover -----------------------------------------------------
     def replicate_for_failover(self, app_name: str) -> None:
@@ -231,26 +271,37 @@ class MeiliController:
 
     def handle_failure(self, nic: str) -> List[str]:
         """NIC (or its link) failed: re-place affected stage units, restore
-        state from the last synchronized snapshot, re-home flows."""
-        t0 = self.clock()
+        state from the last synchronized snapshot, re-home flows.
+
+        The lost units and bandwidth charge are returned to the *failed*
+        NIC's ledger (it is dead, so they are unobservable until a revive —
+        but a revived NIC must come back clean, and the pool-wide ledger
+        invariant must keep holding). Each impacted tenant's failover
+        response time is measured from the start of ITS OWN re-placement,
+        not a shared epoch that inflates later tenants' numbers."""
         self.pool.mark_failed(nic)
         impacted: List[str] = []
         for name, dep in self.deployments.items():
-            lost = dict(dep.allocation.A.get(nic, {}))
-            if not any(v > 0 for v in lost.values()):
+            lost = {s: u for s, u in dep.allocation.A.get(nic, {}).items()
+                    if u > 0}
+            if not lost:
                 continue
+            t0 = self.clock()
             impacted.append(name)
-            dep.allocation.A[nic] = {}
             need = dep.app.resource_needs()
-            # Re-place exactly the units lost on the failed NIC.
+            # Return the lost ledger entries to the dead NIC...
+            st = self.pool[nic]
+            for s, u in lost.items():
+                st.give(need[s], u)
+            st.give_bw(dep.allocation.bw_charge.pop(nic, 0.0))
+            dep.allocation.A[nic] = {}
+            dep.allocation.bw_after[nic] = st.free_bw_gbps
+            # ...and re-place exactly the units lost on it.
             lost_demand = {s: lost.get(s, 0) for s in dep.profile.stages}
             replacement = resource_alloc(dep.profile.stages, lost_demand,
                                          dep.profile.t_s, self.pool, need)
             commit(self.pool, replacement, need)
-            for n, row in replacement.A.items():
-                for s, u in row.items():
-                    dep.allocation.A.setdefault(n, {})[s] = \
-                        dep.allocation.A.get(n, {}).get(s, 0) + u
+            dep.allocation.merge(replacement)
             unmet = {s: u for s, u in replacement.unmet.items() if u > 0}
             dep.r_s = {s: dep.allocation.units(s) for s in dep.profile.stages}
             dep.achievable_gbps = self._achievable(dep.profile, dep.allocation,
@@ -263,6 +314,111 @@ class MeiliController:
                         "app": name, "tenant": dep.tenant, "nic": nic,
                         "unmet": unmet, "response_s": self.clock() - t0})
         return impacted
+
+    # -- online re-placement / defragmentation (make-before-break) ----------------
+    def migrate(self, app_name: str,
+                only_nics: Optional[List[str]] = None,
+                require_improvement: bool = True) -> Optional[dict]:
+        """Re-place a live deployment onto a better-packed NIC set.
+
+        Make-before-break: the destination units are allocated and committed
+        *while the old placement still serves traffic*, flows are handed
+        over through the TO's migration protocol (halt -> buffer -> re-home),
+        and only then is the source placement released. A do-no-harm guard
+        rejects any plan that would raise the deployment's hop count or
+        lower its achievable throughput — rejected plans leave the pool
+        untouched. Returns the emitted migrate event, or None if no
+        admissible plan exists.
+        """
+        t0 = self.clock()
+        dep = self.deployments[app_name]
+        need = dep.app.resource_needs()
+        demand = {s: dep.allocation.units(s) for s in dep.profile.stages}
+        if only_nics is None:
+            shadow = defrag_mod.plan_migration(dep, self.pool)
+        else:
+            shadow = resource_alloc(dep.profile.stages, demand,
+                                    dep.profile.t_s, self.pool, need,
+                                    only_nics=only_nics)
+        if shadow is None or not shadow.satisfied():
+            return None
+        # Do-no-harm guard, evaluated on the shadow plan before any commit:
+        # the migration must not lose capacity or locality, and (unless the
+        # caller pinned the targets) must strictly improve packing.
+        old_hops = defrag_mod.hop_pair_count(dep.allocation,
+                                             dep.profile.stages)
+        new_hops = defrag_mod.hop_pair_count(shadow, dep.profile.stages)
+        new_achievable = self._achievable(dep.profile, shadow, demand)
+        harmless = (new_hops <= old_hops
+                    and new_achievable >= dep.achievable_gbps - 1e-9)
+        improves = (shadow.num_nics_used() < dep.allocation.num_nics_used()
+                    or new_hops < old_hops)
+        if not harmless or (require_improvement and not improves):
+            return None
+
+        # MAKE: commit the destination units (the pool now holds both).
+        commit(self.pool, shadow, need)
+        old_alloc = dep.allocation
+
+        # Migrate flows via the TO: halt every flow (in-flight packets buffer
+        # in the side ring), then re-home it — same pipeline topology, the
+        # pipelines just live on the destination NICs now.
+        for f in list(dep.to.flow_table):
+            dep.to.begin_migration(f)
+        for f, pid in list(dep.to.flow_table.items()):
+            dep.to.finish_migration(f, dst_pid=pid)
+
+        # BREAK: swap the allocation and release the source units.
+        dep.allocation = shadow
+        dep.r_s = {s: shadow.units(s) for s in dep.profile.stages}
+        dep.achievable_gbps = new_achievable
+        release(self.pool, old_alloc, need, dep.profile.t_s)
+        self._account(dep)
+        event = {"t": self.clock(), "event": "migrate", "app": app_name,
+                 "tenant": dep.tenant,
+                 "nics_before": sorted(n for n, row in old_alloc.A.items()
+                                       if any(v > 0 for v in row.values())),
+                 "nics_after": sorted(dep.nics_used()),
+                 "hop_pairs_before": old_hops, "hop_pairs_after": new_hops,
+                 "response_s": self.clock() - t0}
+        self._emit(event)
+        return event
+
+    def defragment(self, max_migrations: int = 1,
+                   min_score: float = 1.0) -> List[dict]:
+        """One background re-placement pass: score every deployment's
+        fragmentation, try to migrate the worst offenders (score-descending)
+        onto compact NIC sets, stop after ``max_migrations`` moves. Returns
+        the migrate events of the moves that went through."""
+        scores = sorted(
+            (defrag_mod.fragmentation_score(dep, self.pool)
+             for dep in self.deployments.values()),
+            key=lambda sc: sc.score, reverse=True)
+        moved: List[dict] = []
+        for sc in scores:
+            if sc.score < min_score or len(moved) >= max_migrations:
+                break
+            ev = self.migrate(sc.app)
+            if ev is not None:
+                moved.append(ev)
+        return moved
+
+    def check_ledger(self, strict: bool = True) -> List[str]:
+        """Pool-truth invariant: per NIC and kind, free + Σ deployments'
+        held units == capacity, and free bw + Σ recorded charges == link."""
+        holdings = []
+        charges = []
+        for dep in self.deployments.values():
+            need = dep.app.resource_needs()
+            h: Dict[str, Dict[str, int]] = {}
+            for n, row in dep.allocation.A.items():
+                for s, u in row.items():
+                    if u > 0:
+                        kinds = h.setdefault(n, {})
+                        kinds[need[s]] = kinds.get(need[s], 0) + u
+            holdings.append(h)
+            charges.append(dict(dep.allocation.bw_charge))
+        return self.pool.check_ledger(holdings, charges, strict=strict)
 
     # -- CA synchronization (paper §3: periodic status sync) ------------------------
     def tick(self) -> dict:

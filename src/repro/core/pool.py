@@ -9,7 +9,12 @@ capabilities; see DESIGN.md §2. The pool abstraction is shared by both.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, Iterable, List, Optional
+
+# Tolerance for floating-point bandwidth bookkeeping. The ledger invariant
+# (free + held == capacity, per NIC) is enforced to this epsilon; anything
+# larger is an accounting bug, not rounding.
+BW_EPS = 1e-6
 
 # Resource type for CPU-like general cores (paper: ARM A72 "resource units").
 CPU = "cpu"
@@ -70,7 +75,38 @@ class NicState:
         self.free[resource] = have - n
 
     def give(self, resource: str, n: int) -> None:
-        self.free[resource] = self.free.get(resource, 0) + n
+        have = self.free.get(resource, 0)
+        cap = self.spec.capacity(resource)
+        if have + n > cap:
+            raise ValueError(
+                f"{self.spec.name}: over-credit of {resource}: "
+                f"{have}+{n} exceeds capacity {cap}")
+        self.free[resource] = have + n
+
+    # -- strict bandwidth ledger (no clamp masking; raise on violation) --------
+    def take_bw(self, gbps: float) -> None:
+        """Charge link bandwidth. Raises if the charge exceeds what is free —
+        a caller committing an allocation computed against stale pool state."""
+        if gbps <= 0.0:
+            return
+        if gbps > self.free_bw_gbps + BW_EPS:
+            raise ValueError(
+                f"{self.spec.name}: cannot take {gbps:.6f} Gbps, only "
+                f"{self.free_bw_gbps:.6f} free (ledger drift?)")
+        self.free_bw_gbps = max(0.0, self.free_bw_gbps - gbps)
+
+    def give_bw(self, gbps: float) -> None:
+        """Credit link bandwidth back. Raises if the credit would push free
+        bandwidth above the link capacity — an over-credit that the old
+        ``min(.., cap)`` clamp used to silently mask."""
+        if gbps <= 0.0:
+            return
+        cap = self.spec.bandwidth_gbps
+        if self.free_bw_gbps + gbps > cap + BW_EPS:
+            raise ValueError(
+                f"{self.spec.name}: bandwidth over-credit: "
+                f"{self.free_bw_gbps:.6f}+{gbps:.6f} exceeds link {cap} Gbps")
+        self.free_bw_gbps = min(cap, self.free_bw_gbps + gbps)
 
 
 class Pool:
@@ -130,6 +166,54 @@ class Pool:
 
     def usage_snapshot(self) -> Dict[str, Dict[str, int]]:
         return {t: dict(u) for t, u in self.usage.items()}
+
+    # -- ledger invariants -----------------------------------------------------
+    def check_ledger(self,
+                     unit_holdings: Iterable[Dict[str, Dict[str, int]]] = (),
+                     bw_charges: Iterable[Dict[str, float]] = (),
+                     strict: bool = True) -> List[str]:
+        """Verify pool truth against the holders' view of what they own.
+
+        ``unit_holdings``: per-holder nic -> kind -> units currently held.
+        ``bw_charges``:   per-holder nic -> net Gbps currently charged.
+
+        Invariant, per NIC and resource kind:  free + Σ held == capacity, and
+        free bandwidth + Σ charges == link bandwidth (within BW_EPS). Dead
+        NICs are checked too — failover must return the lost ledger entries
+        so a revived NIC comes back clean. Returns the list of violations
+        (raises instead when ``strict``).
+        """
+        held_units: Dict[str, Dict[str, int]] = {}
+        for holding in unit_holdings:
+            for nic, kinds in holding.items():
+                row = held_units.setdefault(nic, {})
+                for k, u in kinds.items():
+                    row[k] = row.get(k, 0) + u
+        held_bw: Dict[str, float] = {}
+        for charge in bw_charges:
+            for nic, g in charge.items():
+                held_bw[nic] = held_bw.get(nic, 0.0) + g
+
+        problems: List[str] = []
+        for name, st in self.nics.items():
+            kinds = set(st.free) | set(held_units.get(name, {}))
+            for k in kinds:
+                free = st.free.get(k, 0)
+                held = held_units.get(name, {}).get(k, 0)
+                cap = st.spec.capacity(k)
+                if free < 0 or free + held != cap:
+                    problems.append(
+                        f"{name}/{k}: free {free} + held {held} != cap {cap}")
+            bw_free = st.free_bw_gbps
+            bw_held = held_bw.get(name, 0.0)
+            bw_cap = st.spec.bandwidth_gbps
+            if bw_free < -BW_EPS or abs(bw_free + bw_held - bw_cap) > 1e-3:
+                problems.append(
+                    f"{name}/bw: free {bw_free:.6f} + held {bw_held:.6f}"
+                    f" != link {bw_cap}")
+        if strict and problems:
+            raise AssertionError("pool ledger drift: " + "; ".join(problems))
+        return problems
 
     def snapshot(self) -> Dict[str, Dict[str, float]]:
         """Controller-agent status sync (paper §3: CA <-> Meili Controller)."""

@@ -33,7 +33,7 @@ from repro.core.controller import MeiliController
 from repro.core.executor import ParallelDataPlane
 from repro.service.tenants import AdmissionError, TenantRegistry
 from repro.service.telemetry import (ClusterTick, TelemetryLog, TenantTick,
-                                     measure_tenant_tick)
+                                     hop_penalties, measure_tenant_tick)
 from repro.service.workload import ScenarioWorkload
 
 
@@ -51,7 +51,10 @@ class RuntimeConfig:
     pkt_bytes: int = 192
     replicate_every: int = 8          # Appendix-D replication cadence
     slo_tol: float = 0.1              # achieved >= (1-tol) * min(offered, contract)
-    slo_grace_ticks: int = 3          # post-failover grace window
+    slo_grace_ticks: int = 3          # post-failover/migration grace window
+    defrag_every: int = 0             # run a defrag pass every N ticks (0 = off)
+    defrag_max_moves: int = 1         # migrations per defrag pass
+    defrag_min_score: float = 1.0     # fragmentation score that justifies a move
     warmup_ticks: int = 2
     max_violation_frac: float = 0.05
     max_sim_seqs: int = 96
@@ -84,7 +87,7 @@ class ServiceRuntime:
         tenant = ev.get("tenant") or ev.get("app")
         if tenant is None:
             return
-        if ev["event"] in ("scale", "failover"):
+        if ev["event"] in ("scale", "failover", "migrate"):
             # Placement changed: the tenant's data plane is rebuilt lazily
             # with the new pipeline count (compiled programs are shared
             # process-wide, so this is cheap).
@@ -93,6 +96,10 @@ class ServiceRuntime:
         if ev["event"] == "failover":
             self._grace_until[tenant] = self.tick_now + self.cfg.slo_grace_ticks
             self._force_rescale.add(tenant)
+        if ev["event"] == "migrate":
+            # Flows buffered through the make-before-break hand-off: give the
+            # tenant the same short SLO grace a failover gets.
+            self._grace_until[tenant] = self.tick_now + self.cfg.slo_grace_ticks
 
     def _drop_plane(self, tenant: str) -> None:
         dp = self._planes.pop(tenant, None)
@@ -158,7 +165,9 @@ class ServiceRuntime:
             self._cooldown[tenant] = self.cfg.scale_cooldown_ticks
             self._force_rescale.discard(tenant)
         else:
-            self._cooldown[tenant] = cooldown - 1
+            # Clamp at zero: letting the counter march negative would make a
+            # later cooldown reset meaningless after long quiet stretches.
+            self._cooldown[tenant] = max(0, cooldown - 1)
 
     # -- failure injection -----------------------------------------------------
     def inject_failure(self, nic: Optional[str] = None) -> Tuple[str, List[str]]:
@@ -199,8 +208,18 @@ class ServiceRuntime:
             self._churn(tick)
             if fail_at is not None and tick == fail_at[0]:
                 nic, _ = self.inject_failure(fail_at[1])
+            if (cfg.defrag_every and tick > 0
+                    and tick % cfg.defrag_every == 0):
+                # Background re-placement between ticks: migrate the most
+                # fragmented deployments onto compact NIC sets (make-before-
+                # break inside the controller; tenants get SLO grace via the
+                # migrate event hook above).
+                self.ctrl.defragment(max_migrations=cfg.defrag_max_moves,
+                                     min_score=cfg.defrag_min_score)
 
             cluster_achieved = 0.0
+            cluster_nics: set = set()
+            cluster_hops = 0
             for tenant in self.registry.active():
                 if tenant not in self.workload.specs:
                     continue
@@ -217,9 +236,11 @@ class ServiceRuntime:
                         jax.block_until_ready(
                             self._plane(tenant).process(batch, tenant=tenant))
 
+                hop_pen = hop_penalties(dep)   # once per tenant per tick
                 p50, p99, achieved, backlog = measure_tenant_tick(
                     dep, offered, cfg.dt_s,
-                    self._backlog.get(tenant, 0.0), cfg.max_sim_seqs)
+                    self._backlog.get(tenant, 0.0), cfg.max_sim_seqs,
+                    hop_pen=hop_pen)
                 self._backlog[tenant] = backlog
                 cluster_achieved += achieved
 
@@ -227,12 +248,17 @@ class ServiceRuntime:
                 slo_ok = (achieved >= (1.0 - cfg.slo_tol) * expect
                           and p99 <= spec.sla.p99_latency_s)
                 in_grace = tick < self._grace_until.get(tenant, -1)
+                tenant_nics = dep.nics_used()
+                tenant_hops = len(hop_pen)
+                cluster_nics.update(tenant_nics)
+                cluster_hops += tenant_hops
                 self.telemetry.record(TenantTick(
                     tick=tick, tenant=tenant, offered_gbps=offered,
                     achieved_gbps=achieved, p50_s=p50, p99_s=p99,
                     units=self.ctrl.pool.reserved_units(tenant),
                     slo_ok=slo_ok, in_grace=in_grace,
-                    event=self._events.pop(tenant, "")))
+                    event=self._events.pop(tenant, ""),
+                    hop_pairs=tenant_hops, nics_used=len(tenant_nics)))
 
                 if (spec.backup_nic is not None
                         and cfg.replicate_every
@@ -243,7 +269,8 @@ class ServiceRuntime:
                 tick=tick, reserved_units=self.ctrl.pool.reserved_units(),
                 achieved_gbps=cluster_achieved,
                 nic_util={r: self.ctrl.pool.utilization(r)
-                          for r in ("cpu", "regex", "crypto", "compression")}))
+                          for r in ("cpu", "regex", "crypto", "compression")},
+                nics_used=len(cluster_nics), hop_pairs=cluster_hops))
             self._events.clear()
             self.tick_now += 1
         return self.telemetry

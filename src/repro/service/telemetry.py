@@ -19,6 +19,7 @@ import numpy as np
 from repro.apps.profiles import HOP_US, PKT_BITS
 from repro.core import sim
 from repro.core.controller import Deployment
+from repro.core.defrag import disjoint_pairs
 
 
 @dataclasses.dataclass
@@ -31,8 +32,10 @@ class TenantTick:
     p99_s: float
     units: int                   # resource units attributed to the tenant
     slo_ok: bool
-    in_grace: bool = False       # post-failover grace (excluded from SLO acct)
-    event: str = ""              # "scale" / "failover" / "admit" / ...
+    in_grace: bool = False       # post-failover/migration grace (no SLO acct)
+    event: str = ""              # "scale" / "failover" / "migrate" / ...
+    hop_pairs: int = 0           # consecutive stages on disjoint NICs
+    nics_used: int = 0           # NICs this tenant's placement spans
 
 
 @dataclasses.dataclass
@@ -41,6 +44,8 @@ class ClusterTick:
     reserved_units: int
     achieved_gbps: float
     nic_util: Dict[str, float]   # resource kind -> pool utilization
+    nics_used: int = 0           # distinct NICs carrying any placement
+    hop_pairs: int = 0           # Σ per-tenant disjoint consecutive pairs
 
 
 class TelemetryLog:
@@ -85,8 +90,22 @@ class TelemetryLog:
                 "achieved_gbps_mean": float(np.mean([t.achieved_gbps for t in s])),
                 "p99_s_max": float(max(t.p99_s for t in s)),
                 "units_mean": float(np.mean([t.units for t in s])),
+                "hop_pairs_mean": float(np.mean([t.hop_pairs for t in s])),
+                "nics_used_mean": float(np.mean([t.nics_used for t in s])),
             }
         return out
+
+    def locality(self, from_tick: int = 0) -> Dict[str, float]:
+        """Cluster-level fragmentation view over ticks >= from_tick: mean
+        NICs carrying placements and mean total disjoint-pair count — the
+        two quantities defragmentation is supposed to pull back down."""
+        window = [c for c in self.cluster_ticks if c.tick >= from_tick]
+        if not window:
+            return {"nics_used_mean": 0.0, "hop_pairs_mean": 0.0}
+        return {
+            "nics_used_mean": float(np.mean([c.nics_used for c in window])),
+            "hop_pairs_mean": float(np.mean([c.hop_pairs for c in window])),
+        }
 
     def totals(self) -> Tuple[float, float]:
         """(Σ achieved Gbps·ticks, Σ reserved units·ticks) over the run —
@@ -99,19 +118,15 @@ class TelemetryLog:
 # -- the per-tick measurement model -------------------------------------------
 
 def hop_penalties(dep: Deployment) -> Dict[Tuple[str, str], float]:
-    """Paper §8.5 hop penalty for consecutive stages placed on disjoint NICs."""
-    out = {}
-    stages = dep.profile.stages
-    for a, b in zip(stages, stages[1:]):
-        na = set(dep.allocation.nics_for(a))
-        nb = set(dep.allocation.nics_for(b))
-        if na and nb and not (na & nb):
-            out[(a, b)] = HOP_US * 1e-6
-    return out
+    """Paper §8.5 hop penalty for consecutive stages placed on disjoint NICs
+    (pair detection shared with the defrag scorer: core.defrag)."""
+    return {pair: HOP_US * 1e-6
+            for pair in disjoint_pairs(dep.allocation, dep.profile.stages)}
 
 
 def measure_tenant_tick(dep: Deployment, offered_gbps: float, dt_s: float,
-                        backlog_pkts: float, max_sim_seqs: int = 96
+                        backlog_pkts: float, max_sim_seqs: int = 96,
+                        hop_pen: Optional[Dict[Tuple[str, str], float]] = None
                         ) -> Tuple[float, float, float, float]:
     """One tick of the latency/throughput model.
 
@@ -137,7 +152,8 @@ def measure_tenant_tick(dep: Deployment, offered_gbps: float, dt_s: float,
     n = int(min(max_sim_seqs, max(4, off_pps * dt_s)))
     res = sim.simulate(dep.profile.stages, l_pkt, R, num_seqs=n,
                        arrival_interval=1.0 / off_pps,
-                       hop_penalty=hop_penalties(dep))
+                       hop_penalty=(hop_pen if hop_pen is not None
+                                    else hop_penalties(dep)))
     lat = np.asarray(res.latencies)
     # Queue carried over from earlier ticks delays everything behind it.
     backlog_delay = new_backlog / cap_pps if cap_pps > 0 else 0.0

@@ -148,3 +148,31 @@ def default_tenant_mix(impl: Optional[str] = "ref") -> List[TenantSpec]:
 
 def contracts(mix: List[TenantSpec]) -> Dict[str, float]:
     return {s.name: s.sla.target_gbps for s in mix}
+
+
+def churn_tenant_mix(ticks: int = 96, impl: Optional[str] = "ref"
+                     ) -> List[TenantSpec]:
+    """A churn-heavy variant of the evaluation mix: two first-wave tenants
+    depart mid-run and a second wave arrives into the holes they leave.
+    Deterministic; arrival/departure ticks scale with the run length so the
+    same mix works for smoke and full benchmark runs."""
+    mix = default_tenant_mix(impl=impl)
+    # First wave: ICG and FM leave, opening mid-run holes in the packing.
+    mix[1] = dataclasses.replace(mix[1], depart_tick=max(2, int(0.30 * ticks)))
+    mix[4] = dataclasses.replace(mix[4], depart_tick=max(3, int(0.45 * ticks)))
+    # Second wave: fresh tenants (their own app instances — deployments are
+    # keyed per tenant) arriving staggered into the fragmented pool.
+    wave2 = (
+        ("ID", 6.0, 400e-6, 1, 0.35),
+        ("FW", 8.0, 600e-6, 1, 0.50),
+        ("LLB", 8.0, 300e-6, 2, 0.60),
+    )
+    for i, (key, gbps, p99, prio, frac) in enumerate(wave2):
+        apps = ALL_APPS(impl=impl)
+        mix.append(TenantSpec(
+            name=f"t-{key.lower()}-w2", app=apps[key],
+            profile=paper_profile(key),
+            sla=TenantSLA(target_gbps=gbps, p99_latency_s=p99, priority=prio),
+            backup_nic=BACKUP_NICS[i % len(BACKUP_NICS)],
+            arrive_tick=max(1, int(frac * ticks))))
+    return mix

@@ -124,7 +124,19 @@ def diurnal(contracts: Dict[str, float], seed: int = 0) -> ScenarioWorkload:
                       trough_frac=0.2, stagger=8)
 
 
-SCENARIOS = {"steady": steady, "bursty": bursty, "diurnal": diurnal}
+def churn(contracts: Dict[str, float], seed: int = 0) -> ScenarioWorkload:
+    """Deep on/off waves with short periods — maximum scale-cycle pressure.
+
+    Paired with a churning tenant mix (arrivals/departures on TenantSpec,
+    see ``tenants.churn_tenant_mix``) this is the scenario that decays
+    Algorithm-2 locality: every trough shrinks allocations, every burst
+    re-grows them into whatever holes departures left behind."""
+    return _staggered(contracts, seed, pattern="bursty", duty=0.4,
+                      period_ticks=20, trough_frac=0.15, stagger=4)
+
+
+SCENARIOS = {"steady": steady, "bursty": bursty, "diurnal": diurnal,
+             "churn": churn}
 
 
 def make_scenario(name: str, contracts: Dict[str, float],

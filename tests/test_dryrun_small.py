@@ -1,15 +1,19 @@
 """Dry-run machinery on a small in-process mesh (the 256/512-chip production
 runs live in experiments/dryrun; this guards the mechanics in CI). Runs in a
-subprocess so the 8-device XLA flag never leaks into other tests."""
+subprocess so the 8-device XLA flag never leaks into other tests.
+
+Uses the `reduced()` (tiny-dims, same-family) variant of olmo-1b with short
+sequences so the lower+compile fits the tier-1 time budget — the mechanics
+under test (SPMD sharding, collectives in the compiled HLO, roofline
+decomposition) are dimension-independent."""
 import json
 import subprocess
 import sys
 
-import pytest
-
 CODE = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"   # never probe for TPU in the subprocess
 import json, jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec
 from repro.configs import get_arch
@@ -22,14 +26,14 @@ from repro.launch import roofline as rl
 from repro.launch.decompose import decompose_cell
 from repro.parallel.sharding import default_rules
 
-cfg = get_arch("olmo-1b")
+cfg = get_arch("olmo-1b").reduced()
 model = build(cfg)
 mesh = jax.make_mesh((4, 2), ("data", "model"))
 rules = default_rules()
 out = {}
 
 # train lower+compile
-shape = ShapeConfig("t", 4096, 32, "train")
+shape = ShapeConfig("t", 512, 8, "train")
 p_struct, p_shard, _ = build_shardings(model, mesh, rules)
 b_struct, b_shard = batch_shardings(model, shape, mesh, rules)
 step_fn, _ = make_train_step(model, shape, mesh, rules)
@@ -41,11 +45,14 @@ comp = jax.jit(step_fn, in_shardings=(p_shard, o_shard, b_shard, sc),
                donate_argnums=(0, 1)).lower(
     p_struct, o_struct, b_struct,
     jax.ShapeDtypeStruct((), jnp.int32)).compile()
-out["train_flops"] = float(comp.cost_analysis().get("flops", 0))
+ca = comp.cost_analysis()
+if isinstance(ca, (list, tuple)):      # older jax returns one dict per device
+    ca = ca[0] if ca else {}
+out["train_flops"] = float(ca.get("flops", 0))
 out["train_coll"] = rl.collective_bytes(comp.as_text())["total"]
 
 # decode lower+compile
-shape_d = ShapeConfig("d", 2048, 16, "decode")
+shape_d = ShapeConfig("d", 256, 8, "decode")
 c_struct, c_shard = cache_shardings(model, shape_d, mesh, rules)
 b_struct, b_shard = batch_shardings(model, shape_d, mesh, rules)
 serve = make_serve_step(model)
@@ -61,10 +68,9 @@ print(json.dumps(out))
 """
 
 
-@pytest.mark.slow
 def test_dryrun_small_mesh():
     res = subprocess.run([sys.executable, "-c", CODE], capture_output=True,
-                         text=True, timeout=900,
+                         text=True, timeout=600,
                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
                               "HOME": "/root"})
     assert res.returncode == 0, res.stderr[-3000:]
@@ -74,7 +80,10 @@ def test_dryrun_small_mesh():
     assert out["decode_ok"] == 1
     r = out["roofline"]
     assert r["dominant"] in ("compute", "memory", "collective")
-    assert 0.05 < r["useful_flops_ratio"] < 1.5
+    # tiny dims pad heavily on TPU-tile granularity, so the useful-flops
+    # ratio sits far below the production configs' band — it just has to
+    # be a sane positive fraction here.
+    assert 0.0 < r["useful_flops_ratio"] < 1.5
     assert r["t_compute"] > 0 and r["t_memory"] > 0
 
 

@@ -1,0 +1,148 @@
+"""Property-style ledger round-trip: any lifecycle sequence conserves pool.
+
+The two accounting bugs this pins: (1) release/shrink used to credit back
+``units * t_s`` per stage even when colocated consecutive stages shared
+bandwidth via the Algorithm-3 credit (over-credit, masked by a capacity
+clamp); (2) ``_shrink`` left ``bw_after`` stale and zero-unit rows in the
+allocation matrix, so later allocations were computed against a fiction.
+
+The invariant checked here is exact (no clamp, epsilon = fp rounding only):
+after ANY random sequence of submit / scale-up / scale-down / migrate /
+failover / terminate, terminating everything returns every NIC — alive or
+failed — to its empty-pool baseline, and mid-sequence the pool-truth ledger
+(free + held == capacity, free_bw + charges == link) holds after every op.
+"""
+import random
+
+import pytest
+
+from repro.apps.nf import ALL_APPS
+from repro.apps.profiles import paper_profile
+from repro.core.controller import MeiliController
+from repro.core.pool import paper_cluster
+
+APP_KEYS = ("ID", "ICG", "ISG", "FW", "FM", "LLB")
+
+
+def snapshot(pool):
+    return {n: (dict(st.free), st.free_bw_gbps)
+            for n, st in pool.nics.items()}
+
+
+def submit_one(ctrl, rng, counter):
+    key = rng.choice(APP_KEYS)
+    app = ALL_APPS(impl="ref")[key]
+    app.name = f"{key.lower()}-{counter}"
+    dep = ctrl.submit(app, target_gbps=rng.uniform(1.0, 8.0),
+                      profile=paper_profile(key))
+    if not dep.allocation.satisfied():
+        ctrl.terminate(app.name)        # strict-admission rollback path
+        return None
+    return app.name
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_random_lifecycle_conserves_pool(seed):
+    rng = random.Random(seed)
+    ctrl = MeiliController(paper_cluster())
+    base = snapshot(ctrl.pool)
+    live = []
+    counter = 0
+    failures = 0
+
+    for _ in range(32):
+        ops = ["submit", "submit"]
+        if live:
+            ops += ["scale_up", "scale_down", "terminate", "migrate"]
+            if failures < 2:
+                ops.append("failover")
+        op = rng.choice(ops)
+        if op == "submit":
+            name = submit_one(ctrl, rng, counter)
+            counter += 1
+            if name:
+                live.append(name)
+        elif op == "scale_up":
+            name = rng.choice(live)
+            ctrl.adaptive_scale(
+                name, ctrl.deployments[name].target_gbps + rng.uniform(0.5, 5.0))
+        elif op == "scale_down":
+            name = rng.choice(live)
+            ctrl.adaptive_scale(
+                name, max(0.5, ctrl.deployments[name].target_gbps
+                          * rng.uniform(0.2, 0.8)))
+        elif op == "migrate":
+            ctrl.migrate(rng.choice(live))   # None (no gain) is fine
+        elif op == "terminate":
+            name = live.pop(rng.randrange(len(live)))
+            ctrl.terminate(name)
+        elif op == "failover":
+            used = sorted({n for d in ctrl.deployments.values()
+                           for n in d.nics_used()
+                           if ctrl.pool[n].alive})
+            if used:
+                ctrl.handle_failure(rng.choice(used))
+                failures += 1
+        # Pool truth must hold after EVERY mutation, not only at the end.
+        ctrl.check_ledger()
+
+    for name in list(ctrl.deployments):
+        ctrl.terminate(name)
+    ctrl.check_ledger()
+
+    assert ctrl.pool.usage_snapshot() == {}
+    for n, (free, bw) in base.items():
+        st = ctrl.pool[n]
+        assert st.free == free, f"{n}: unit drift {st.free} != {free}"
+        assert st.free_bw_gbps == pytest.approx(bw, abs=1e-6), \
+            f"{n}: bandwidth drift {st.free_bw_gbps} != {bw}"
+
+
+def test_colocated_release_does_not_overcredit():
+    """The targeted regression: two colocated stages share bandwidth on one
+    NIC via the Algorithm-3 credit; with a second deployment holding real
+    bandwidth on the same NIC, the old per-unit release would push free
+    bandwidth above pool truth (masked only when the NIC was otherwise
+    empty). Exact conservation must hold with the NIC still occupied."""
+    from repro.core.allocation import commit, release, resource_alloc
+    from repro.core.pool import CPU, NicSpec, Pool
+
+    pool = Pool([NicSpec("n0", "x", 16, {}, bandwidth_gbps=20.0)])
+    S = ["s1", "s2"]
+    need = {s: CPU for s in S}
+    t_s = {"s1": 5.0, "s2": 5.0}
+    # Deployment A: 2+2 colocated units; s2 reuses s1's bandwidth, so the
+    # net charge is 10 Gbps, not 20.
+    a = resource_alloc(S, {"s1": 2, "s2": 2}, t_s, pool, need)
+    commit(pool, a, need)
+    assert pool["n0"].free_bw_gbps == pytest.approx(10.0)
+    # Deployment B occupies the remaining 10 Gbps.
+    b = resource_alloc(["s1"], {"s1": 2}, t_s, pool, need)
+    commit(pool, b, need)
+    assert pool["n0"].free_bw_gbps == pytest.approx(0.0)
+    # Releasing A must credit exactly its net 10 Gbps — the naive
+    # units*t_s sum (20) would claim bandwidth B still holds.
+    release(pool, a, need, t_s)
+    assert pool["n0"].free_bw_gbps == pytest.approx(10.0)
+    release(pool, b, need, t_s)
+    assert pool["n0"].free_bw_gbps == pytest.approx(20.0)
+    assert pool["n0"].free == {CPU: 16}
+
+
+def test_shrink_resyncs_allocator_view():
+    """After a scale-down the allocation matrix must carry no zero-unit rows
+    and bw_after must equal pool truth (controller.py _shrink resync)."""
+    from repro.core.profiler import synthetic_profile
+
+    ctrl = MeiliController(paper_cluster())
+    app = ALL_APPS(impl="ref")["FW"]
+    prof = synthetic_profile(
+        app.stage_names(),
+        {"rule_match": 200e-6, "conn_track": 150e-6}, 1500 * 8 * 256.0)
+    ctrl.submit(app, target_gbps=20.0, profile=prof)
+    dep = ctrl.adaptive_scale(app.name, 2.0)
+    for nic, row in dep.allocation.A.items():
+        assert all(u > 0 for u in row.values()), (nic, row)
+        assert dep.allocation.bw_after[nic] == \
+            pytest.approx(ctrl.pool[nic].free_bw_gbps)
+    ctrl.check_ledger()

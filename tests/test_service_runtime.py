@@ -10,7 +10,8 @@ from repro.core.controller import MeiliController
 from repro.core.pool import paper_cluster
 from repro.service.runtime import RuntimeConfig, ServiceRuntime
 from repro.service.tenants import (AdmissionError, TenantRegistry, TenantSLA,
-                                   TenantSpec, contracts, default_tenant_mix)
+                                   TenantSpec, churn_tenant_mix, contracts,
+                                   default_tenant_mix)
 from repro.service.workload import (ScenarioWorkload, TrafficSpec,
                                     make_scenario)
 
@@ -180,6 +181,52 @@ def test_tenant_churn_admits_and_refunds():
     assert arr and min(t.tick for t in arr) >= 5
     dep = rt.telemetry.series(departing)
     assert dep and max(t.tick for t in dep) < 10
+
+
+# -- defragmentation ----------------------------------------------------------
+
+def test_runtime_defrag_recovers_locality_under_churn():
+    """The background re-placement loop: same churning mix + seeded traffic
+    with defrag off vs on. On must migrate, recover locality (fewer NICs,
+    no more hop pairs than off), grace the migrated tenants, and leave the
+    pool ledger exact."""
+    TICKS = 48
+    runs = {}
+    for defrag_on in (False, True):
+        mix = churn_tenant_mix(ticks=TICKS)
+        cfg = dataclasses.replace(FAST, defrag_every=8 if defrag_on else 0,
+                                  defrag_max_moves=2)
+        ctrl = MeiliController(paper_cluster())
+        registry = TenantRegistry(ctrl)
+        for spec in mix:
+            registry.register(spec)
+        wl = make_scenario("churn", contracts(mix), seed=0)
+        rt = ServiceRuntime(ctrl, registry, wl, cfg)
+        registry.admit_all()
+        rt.run(TICKS)
+        ctrl.check_ledger()
+        runs[defrag_on] = (rt, ctrl)
+
+    rt_off, _ = runs[False]
+    rt_on, ctrl_on = runs[True]
+    migrated = {e["tenant"] for e in ctrl_on.events if e["event"] == "migrate"}
+    assert migrated, "defrag loop never migrated under churn"
+    tail = int(0.7 * TICKS)
+    loc_off = rt_off.telemetry.locality(from_tick=tail)
+    loc_on = rt_on.telemetry.locality(from_tick=tail)
+    assert loc_on["nics_used_mean"] < loc_off["nics_used_mean"]
+    assert loc_on["hop_pairs_mean"] <= loc_off["hop_pairs_mean"]
+    # migrated tenants got the SLO grace window and the migrate event tag
+    graced = {t.tenant for t in rt_on.telemetry.tenant_ticks if t.in_grace}
+    tagged = {t.tenant for t in rt_on.telemetry.tenant_ticks
+              if t.event == "migrate"}
+    assert migrated <= graced
+    assert migrated & tagged
+    # no tenant that passes SLO without defrag regresses with it
+    off_pass = {t: r["pass"] for t, r in rt_off.slo_report().items()}
+    on_pass = {t: r["pass"] for t, r in rt_on.slo_report().items()}
+    assert not [t for t, ok in off_pass.items()
+                if ok and not on_pass.get(t, False)]
 
 
 # -- attribution --------------------------------------------------------------
