@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-slow bench bench-dataplane bench-service bench-defrag
+.PHONY: test test-slow bench bench-dataplane bench-service bench-defrag bench-qos
 
 # Tier-1 suite. pytest.ini excludes `slow` tests by default (the small
 # dry-run compiles a full train step and can take minutes), so this can
@@ -29,3 +29,10 @@ bench-service:
 # merges the `defrag` record into BENCH_service.json.
 bench-defrag:
 	python -m benchmarks.bench_service --scenario churn
+
+# QoS governor scenarios (ISSUE 4): flash-crowd isolation A/B (governor on
+# vs off) + adversarial-churn admission pressure; merges the `qos` and
+# `adversarial_churn` records into BENCH_service.json.
+bench-qos:
+	python -m benchmarks.bench_service --scenario flashcrowd
+	python -m benchmarks.bench_service --scenario adversarial

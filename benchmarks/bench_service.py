@@ -3,21 +3,26 @@
 Runs the default 6-tenant mix through the deployment-mode comparator
 (pooled vs standalone vs microservice) under the bursty and diurnal
 scenarios, with one NIC failure injected into the pooled bursty run, plus
-the churn-heavy defragmentation A/B (ISSUE 3): the churning tenant mix under
-the ``churn`` scenario with the background re-placement loop off vs on, same
-seed and traffic. Writes ``BENCH_service.json`` with the efficiency ratios,
-per-scenario per-tenant SLO compliance, the failover record, and the
-locality-recovery record.
+the churn-heavy defragmentation A/B (ISSUE 3) and the QoS records
+(ISSUE 4): the flash-crowd isolation A/B (ResourceGovernor on vs off, same
+mix and seeded traffic on a headroom-free pool) and the adversarial-churn
+admission-pressure run. Writes ``BENCH_service.json`` with the efficiency
+ratios, per-scenario per-tenant SLO compliance, the failover record, the
+locality-recovery record, and the isolation record.
 
 Headline acceptance bars (checked by ``main`` and surfaced in the JSON):
   pooled efficiency >= 2x standalone, >= 1.2x microservice, all tenant SLOs
-  pass under both scenarios, the injected failure drops no tenant, and
+  pass under both scenarios, the injected failure drops no tenant,
   defrag-on uses fewer NICs with fewer hop-penalty pairs than defrag-off
-  with no tenant SLO regression.
+  with no tenant SLO regression, governor-on keeps every in-quota tenant
+  within SLO under the flash crowd while governor-off breaks >= 1, and
+  adversarial churn rejects strictly without harming admitted tenants.
 
 Run headlessly:   PYTHONPATH=src python -m benchmarks.bench_service
 Smoke (CI) mode:  PYTHONPATH=src python -m benchmarks.bench_service --fast
 Defrag A/B only:  PYTHONPATH=src python -m benchmarks.bench_service --scenario churn
+QoS A/B only:     PYTHONPATH=src python -m benchmarks.bench_service --scenario flashcrowd
+                  (+ --scenario adversarial; both via make bench-qos)
 """
 from __future__ import annotations
 
@@ -30,15 +35,27 @@ import time
 from benchmarks.common import row
 from repro.core.controller import MeiliController
 from repro.core.pool import paper_cluster
+from repro.core.qos import ResourceGovernor
 from repro.service.efficiency import MODES, run_comparison
 from repro.service.runtime import RuntimeConfig, ServiceRuntime
-from repro.service.tenants import TenantRegistry, churn_tenant_mix, contracts
+from repro.service.tenants import (TenantRegistry, churn_tenant_mix,
+                                   contracts, default_tenant_mix)
 from repro.service.workload import make_scenario
 
 TICKS = 120
 FAST_TICKS = 32
 CHURN_TICKS = 96
 CHURN_FAST_TICKS = 48
+QOS_TICKS = 96
+QOS_FAST_TICKS = 48
+
+# The QoS isolation A/B runs on a pool with no multiplexing headroom (the
+# flash-crowd premise): a 6-NIC rack that admits the 6-tenant mix at
+# contract with little slack. The crowd is the heaviest per-Gbps consumer
+# (FW: 3.75 Gbps per unit, CPU-only — the axis every tenant shares).
+QOS_POOL = dict(n_bf2=3, n_bf1=1, n_pensando=2)
+QOS_CROWD = "t-fw"
+QOS_SURGE = 8.0
 
 BARS = {"pooled_vs_standalone": 2.0, "pooled_vs_microservice": 1.2}
 
@@ -48,6 +65,15 @@ def run(emit=print, fast: bool = False, seed: int = 0,
     if scenario == "churn":
         res = {"defrag": run_defrag(emit=emit, fast=fast, seed=seed)}
         res["pass"] = res["defrag"]["pass"]
+        return res
+    if scenario == "flashcrowd":
+        res = {"qos": run_qos(emit=emit, fast=fast, seed=seed)}
+        res["pass"] = res["qos"]["pass"]
+        return res
+    if scenario == "adversarial":
+        res = {"adversarial_churn": run_adversarial(emit=emit, fast=fast,
+                                                    seed=seed)}
+        res["pass"] = res["adversarial_churn"]["pass"]
         return res
     cfg = RuntimeConfig() if not fast else RuntimeConfig(
         dataplane_every=0, max_sim_seqs=48)
@@ -69,6 +95,9 @@ def run(emit=print, fast: bool = False, seed: int = 0,
                      f"nic={fo['failed_nic']}_alive={fo['tenants_alive_after']}"
                      f"_survived={fo['survived']}"))
     res["defrag"] = run_defrag(emit=emit, fast=fast, seed=seed)
+    res["qos"] = run_qos(emit=emit, fast=fast, seed=seed)
+    res["adversarial_churn"] = run_adversarial(emit=emit, fast=fast,
+                                               seed=seed)
     res["bars"] = BARS
     res["pass"] = check(res)
     return res
@@ -149,14 +178,141 @@ def run_defrag(emit=print, fast: bool = False, seed: int = 0) -> dict:
     return rec
 
 
+def _qos_mix():
+    """The evaluation mix without backup NICs (the QoS pool is smaller than
+    the full rack, so the default bf1 backups may not exist)."""
+    return [dataclasses.replace(s, backup_nic=None)
+            for s in default_tenant_mix()]
+
+
+def _run_flash_arm(governor_on: bool, ticks: int, cfg: RuntimeConfig,
+                   seed: int) -> dict:
+    """One arm of the QoS isolation A/B: same mix, same seeded flash-crowd
+    traffic; only quota enforcement differs (ResourceGovernor enabled/off)."""
+    mix = _qos_mix()
+    ctrl = MeiliController(paper_cluster(**QOS_POOL),
+                           governor=ResourceGovernor(enabled=governor_on))
+    registry = TenantRegistry(ctrl)
+    for spec in mix:
+        registry.register(spec)
+    wl = make_scenario("flash_crowd", contracts(mix), seed=seed,
+                       surge=QOS_SURGE, crowd=QOS_CROWD)
+    rt = ServiceRuntime(ctrl, registry, wl, cfg)
+    registry.admit_all()
+    rt.run(ticks)
+    ctrl.check_ledger()     # quota enforcement must leave pool truth intact
+    slo = rt.slo_report()
+    crowd_ticks = rt.telemetry.series(QOS_CROWD)
+    return {
+        "slo": slo,
+        "slo_pass": {t: r["pass"] for t, r in slo.items()},
+        "crowd_peak_granted_gbps": max(
+            (t.granted_gbps for t in crowd_ticks), default=0.0),
+        "crowd_peak_backlog_pkts": max(
+            (t.backlog_pkts for t in crowd_ticks), default=0.0),
+        "alive_tenants": len(rt.alive_tenants()),
+    }
+
+
+def run_qos(emit=print, fast: bool = False, seed: int = 0) -> dict:
+    """Flash-crowd isolation A/B (ISSUE 4 acceptance): with the governor, a
+    crowd tenant exceeding its quota queues behind its own deficit and
+    degrades only itself; without it, the crowd's unguarded over-scaling
+    strips the headroom ≥1 in-quota tenant needs and breaks its SLO."""
+    ticks = QOS_FAST_TICKS if fast else QOS_TICKS
+    cfg = (RuntimeConfig(dataplane_every=0, max_sim_seqs=48) if fast
+           else RuntimeConfig())
+    on = _run_flash_arm(True, ticks, cfg, seed)
+    off = _run_flash_arm(False, ticks, cfg, seed)
+    innocents_on_ok = all(ok for t, ok in on["slo_pass"].items()
+                          if t != QOS_CROWD)
+    broken_off = sorted(t for t, ok in off["slo_pass"].items()
+                        if t != QOS_CROWD and not ok)
+    crowd_quota = contracts(_qos_mix())[QOS_CROWD]   # default quota = contract
+    crowd_clamped = on["crowd_peak_granted_gbps"] <= crowd_quota + 1e-6
+    rec = {
+        # self-describing (mergeable into a JSON from another mode/seed).
+        "fast": fast,
+        "seed": seed,
+        "ticks": ticks,
+        "pool": dict(QOS_POOL),
+        "crowd": QOS_CROWD,
+        "surge": QOS_SURGE,
+        "governor_on": on,
+        "governor_off": off,
+        "isolation": {
+            "innocents_within_slo_on": innocents_on_ok,
+            "crowd_clamped_at_quota_on": crowd_clamped,
+            "crowd_contained_on": not on["slo_pass"].get(QOS_CROWD, True),
+            "innocents_broken_off": broken_off,
+        },
+    }
+    # Pass: governor-on protects every in-quota tenant AND actually clamps
+    # the crowd at its quota (its excess degrades only itself), while
+    # governor-off demonstrably harms >= 1 innocent.
+    rec["pass"] = bool(innocents_on_ok and crowd_clamped and broken_off)
+    emit(row("service_qos_crowd_granted", 0,
+             f"on{on['crowd_peak_granted_gbps']:.1f}Gbps_off"
+             f"{off['crowd_peak_granted_gbps']:.1f}Gbps"))
+    emit(row("service_qos_isolation_on", 0,
+             f"innocents_ok={innocents_on_ok}"))
+    emit(row("service_qos_isolation_off", 0,
+             f"broken={len(broken_off)}:{','.join(broken_off) or 'none'}"))
+    emit(row("service_qos", 0, f"pass={rec['pass']}"))
+    return rec
+
+
+def run_adversarial(emit=print, fast: bool = False, seed: int = 0) -> dict:
+    """Adversarial churn (admission pressure at peak): the churning tenant
+    mix under correlated near-contract load on the headroom-free QoS pool —
+    wave-2 arrivals must be strictly admitted (or rejected) while the pool
+    is as full as it gets, without harming anyone already admitted."""
+    ticks = QOS_FAST_TICKS if fast else QOS_TICKS
+    cfg = (RuntimeConfig(dataplane_every=0, max_sim_seqs=48) if fast
+           else RuntimeConfig())
+    mix = [dataclasses.replace(s, backup_nic=None)
+           for s in churn_tenant_mix(ticks=ticks)]
+    ctrl = MeiliController(paper_cluster(**QOS_POOL),
+                           governor=ResourceGovernor())
+    registry = TenantRegistry(ctrl)
+    for spec in mix:
+        registry.register(spec)
+    wl = make_scenario("adversarial_churn", contracts(mix), seed=seed)
+    rt = ServiceRuntime(ctrl, registry, wl, cfg)
+    registry.admit_all()
+    rt.run(ticks)
+    ctrl.check_ledger()
+    slo = rt.slo_report()
+    rec = {
+        "fast": fast,
+        "seed": seed,
+        "ticks": ticks,
+        "pool": dict(QOS_POOL),
+        "admitted": len(registry.admitted),
+        "rejected": {t: r for t, r in registry.rejected.items()},
+        "alive_tenants": len(rt.alive_tenants()),
+        "slo_pass": {t: r["pass"] for t, r in slo.items()},
+    }
+    # Pass: admission pressure was real (>=1 strict rejection), nobody
+    # admitted was dropped, no admitted tenant lost its SLO, ledger exact.
+    rec["pass"] = bool(rec["rejected"]
+                       and rec["alive_tenants"] == rec["admitted"]
+                       and all(rec["slo_pass"].values()))
+    emit(row("service_adversarial_admissions", 0,
+             f"admitted{rec['admitted']}_rejected{len(rec['rejected'])}"))
+    emit(row("service_adversarial_churn", 0, f"pass={rec['pass']}"))
+    return rec
+
+
 def check(res: dict) -> bool:
     ok = all(res["ratios"][k] >= bar for k, bar in BARS.items())
     for rec in res["scenarios"].values():
         ok = ok and all(rec[m]["slo_pass"] for m in MODES)
         if "failover" in rec:
             ok = ok and rec["failover"]["survived"]
-    if "defrag" in res:
-        ok = ok and res["defrag"]["pass"]
+    for extra in ("defrag", "qos", "adversarial_churn"):
+        if extra in res:
+            ok = ok and res[extra]["pass"]
     return ok
 
 
@@ -165,9 +321,13 @@ def main(argv=None) -> None:
     ap.add_argument("--fast", action="store_true",
                     help="smoke mode: fewer ticks, analytic model only")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--scenario", choices=("full", "churn"), default="full",
+    ap.add_argument("--scenario",
+                    choices=("full", "churn", "flashcrowd", "adversarial"),
+                    default="full",
                     help="churn = only the defragmentation A/B "
-                         "(make bench-defrag)")
+                         "(make bench-defrag); flashcrowd = only the QoS "
+                         "isolation A/B, adversarial = only the "
+                         "admission-pressure run (make bench-qos)")
     ap.add_argument("--out", default=None,
                     help="output JSON path (default: repo-root BENCH_service.json)")
     args = ap.parse_args(argv)
@@ -186,13 +346,16 @@ def main(argv=None) -> None:
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         **res,
     }
-    if args.scenario == "churn":
+    partial_keys = {"churn": "defrag", "flashcrowd": "qos",
+                    "adversarial": "adversarial_churn"}
+    if args.scenario in partial_keys:
         # keep the full-comparison numbers already on disk; merge the new
-        # defrag record into the existing JSON instead of clobbering it
+        # partial record into the existing JSON instead of clobbering it
+        key = partial_keys[args.scenario]
         if out.exists():
             try:
                 prev = json.loads(out.read_text())
-                prev.update({"defrag": payload["defrag"],
+                prev.update({key: payload[key],
                              "timestamp": payload["timestamp"]})
                 if "ratios" in prev:
                     prev["pass"] = check(prev)

@@ -32,7 +32,12 @@ def main():
     print(f"single-pipeline: {prof.t_p:.3f} Gbps, latency {prof.l_p*1e3:.1f} ms")
 
     # 4. Submit with a throughput target -> Algorithm 1 R + Algorithm 2 place.
-    dep = ctrl.submit(app, target_gbps=min(2.0, prof.t_p * 4), profile=prof)
+    #    Two minimal-granularity units per stage: ISG's sha AND aes stages
+    #    both bind to the pool's 4 crypto engines, so a 4-units-per-stage
+    #    target (the old `t_p * 4`) over-demanded crypto 8 > 4, left aes
+    #    unplaced, and achievable pinned at 0 — the long-standing quickstart
+    #    IndexError when the failover demo indexed aes's (empty) NIC list.
+    dep = ctrl.submit(app, target_gbps=min(2.0, prof.t_p * 2), profile=prof)
     print(f"\nreplication R = {dep.R}")
     print(f"pipelines: {dep.num_pipelines}, achievable {dep.achievable_gbps:.2f} Gbps")
     for s in app.stage_names():
@@ -52,7 +57,8 @@ def main():
     dep = ctrl.adaptive_scale(app.name, dep.achievable_gbps * 1.5)
     print(f"\nafter scale-up: units {dep.r_s} achievable "
           f"{dep.achievable_gbps:.2f} Gbps")
-    victim = dep.allocation.nics_for("aes")[0]
+    aes_nics = dep.allocation.nics_for("aes")
+    victim = aes_nics[0] if aes_nics else dep.nics_used()[0]
     ctrl.handle_failure(victim)
     dep = ctrl.deployments[app.name]
     print(f"after {victim} failure: aes now on "

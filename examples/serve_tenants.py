@@ -19,7 +19,8 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--ticks", type=int, default=48)
     ap.add_argument("--scenario", default="diurnal",
-                    choices=("steady", "bursty", "diurnal"))
+                    choices=("steady", "bursty", "diurnal", "churn",
+                             "flash_crowd", "adversarial_churn"))
     ap.add_argument("--watch", default="t-fw", help="tenant to print per tick")
     ap.add_argument("--no-dataplane", action="store_true",
                     help="skip real fused-data-plane execution (analytic only)")

@@ -19,3 +19,5 @@ from repro.core.executor import ParallelDataPlane, PipelineRunner
 from repro.core.state_engine import (StateService, bounded_sync,
                                      bounded_sync_deltas)
 from repro.core.profiler import measure_app, synthetic_profile, AppProfile
+from repro.core.qos import (ResourceGovernor, TenantQuota, ScaleVerdict,
+                            quota_from_sla)

@@ -32,6 +32,7 @@ from repro.core.graph import MeiliApp
 from repro.core.orchestrator import TrafficOrchestrator
 from repro.core.pool import Pool
 from repro.core.profiler import AppProfile
+from repro.core.qos import ResourceGovernor
 from repro.core.state_engine import StateService
 
 
@@ -78,8 +79,14 @@ class ControllerAgent:
 
 
 class MeiliController:
-    def __init__(self, pool: Pool, clock: Callable[[], float] = time.monotonic):
+    def __init__(self, pool: Pool, clock: Callable[[], float] = time.monotonic,
+                 governor: Optional[ResourceGovernor] = None):
         self.pool = pool
+        # Every capacity/priority decision — admission clamp, scale grant,
+        # migration do-no-harm, failover ordering — routes through one
+        # governor (permissive defaults when no quotas are registered).
+        self.governor = governor or ResourceGovernor()
+        self.governor.bind(pool)
         self.agents = {n: ControllerAgent(n, pool) for n in pool.nics}
         self.deployments: Dict[str, Deployment] = {}
         self.state = StateService(list(pool.nics))
@@ -125,6 +132,10 @@ class MeiliController:
     def submit(self, app: MeiliApp, target_gbps: float, profile: AppProfile,
                backup_nic: Optional[str] = None,
                tenant: Optional[str] = None) -> Deployment:
+        # Admission routes through the governor: a target above the tenant's
+        # declared quota is clamped before any demand/placement math runs.
+        target_gbps = self.governor.admission_target(tenant or app.name,
+                                                     target_gbps)
         R, r_s, t_R = self.demand(profile, target_gbps)
         need = app.resource_needs()
         alloc = resource_alloc(profile.stages, r_s, profile.t_s, self.pool, need)
@@ -278,14 +289,21 @@ class MeiliController:
         but a revived NIC must come back clean, and the pool-wide ledger
         invariant must keep holding). Each impacted tenant's failover
         response time is measured from the start of ITS OWN re-placement,
-        not a shared epoch that inflates later tenants' numbers."""
+        not a shared epoch that inflates later tenants' numbers.
+
+        Re-placement order and demand route through the governor: impacted
+        tenants re-place heaviest-weight first (scarce surviving capacity
+        goes to the contracts the pool values most), and the re-placed
+        demand is clamped to the tenant's unit quota."""
         self.pool.mark_failed(nic)
         impacted: List[str] = []
-        for name, dep in self.deployments.items():
+        victims = [name for name, dep in self.deployments.items()
+                   if any(u > 0
+                          for u in dep.allocation.A.get(nic, {}).values())]
+        for name in self.governor.failover_order(victims):
+            dep = self.deployments[name]
             lost = {s: u for s, u in dep.allocation.A.get(nic, {}).items()
                     if u > 0}
-            if not lost:
-                continue
             t0 = self.clock()
             impacted.append(name)
             need = dep.app.resource_needs()
@@ -296,8 +314,11 @@ class MeiliController:
             st.give_bw(dep.allocation.bw_charge.pop(nic, 0.0))
             dep.allocation.A[nic] = {}
             dep.allocation.bw_after[nic] = st.free_bw_gbps
-            # ...and re-place exactly the units lost on it.
-            lost_demand = {s: lost.get(s, 0) for s in dep.profile.stages}
+            # ...and re-place the units lost on it, quota-clamped.
+            held = sum(dep.allocation.units(s) for s in dep.profile.stages)
+            capped = self.governor.replacement_demand(
+                dep.tenant or name, lost, held_units=held)
+            lost_demand = {s: capped.get(s, 0) for s in dep.profile.stages}
             replacement = resource_alloc(dep.profile.stages, lost_demand,
                                          dep.profile.t_s, self.pool, need)
             commit(self.pool, replacement, need)
@@ -342,18 +363,18 @@ class MeiliController:
                                     only_nics=only_nics)
         if shadow is None or not shadow.satisfied():
             return None
-        # Do-no-harm guard, evaluated on the shadow plan before any commit:
-        # the migration must not lose capacity or locality, and (unless the
-        # caller pinned the targets) must strictly improve packing.
-        old_hops = defrag_mod.hop_pair_count(dep.allocation,
-                                             dep.profile.stages)
-        new_hops = defrag_mod.hop_pair_count(shadow, dep.profile.stages)
-        new_achievable = self._achievable(dep.profile, shadow, demand)
-        harmless = (new_hops <= old_hops
-                    and new_achievable >= dep.achievable_gbps - 1e-9)
-        improves = (shadow.num_nics_used() < dep.allocation.num_nics_used()
-                    or new_hops < old_hops)
-        if not harmless or (require_improvement and not improves):
+        # Do-no-harm guard, evaluated on the shadow plan before any commit —
+        # the policy itself lives in the governor (migration_verdict).
+        impact = defrag_mod.migration_impact(
+            dep, shadow, self._achievable(dep.profile, shadow, demand))
+        old_hops, new_hops = impact.hops_before, impact.hops_after
+        new_achievable = impact.achievable_after
+        if not self.governor.migration_verdict(
+                hops_before=impact.hops_before, hops_after=impact.hops_after,
+                achievable_before=impact.achievable_before,
+                achievable_after=impact.achievable_after,
+                nics_before=impact.nics_before, nics_after=impact.nics_after,
+                require_improvement=require_improvement):
             return None
 
         # MAKE: commit the destination units (the pool now holds both).
@@ -390,10 +411,9 @@ class MeiliController:
         fragmentation, try to migrate the worst offenders (score-descending)
         onto compact NIC sets, stop after ``max_migrations`` moves. Returns
         the migrate events of the moves that went through."""
-        scores = sorted(
-            (defrag_mod.fragmentation_score(dep, self.pool)
-             for dep in self.deployments.values()),
-            key=lambda sc: sc.score, reverse=True)
+        scores = self.governor.defrag_order(
+            defrag_mod.fragmentation_score(dep, self.pool)
+            for dep in self.deployments.values())
         moved: List[dict] = []
         for sc in scores:
             if sc.score < min_score or len(moved) >= max_migrations:

@@ -116,6 +116,32 @@ def fragmentation_score(dep: "Deployment", pool: Pool) -> FragmentationScore:
                               score=score)
 
 
+@dataclasses.dataclass(frozen=True)
+class MigrationImpact:
+    """What a shadow re-placement would change — the pure inputs the QoS
+    governor's do-no-harm verdict (``ResourceGovernor.migration_verdict``)
+    decides on. Computed before any commit so a rejection costs nothing."""
+
+    hops_before: int
+    hops_after: int
+    achievable_before: float
+    achievable_after: float
+    nics_before: int
+    nics_after: int
+
+
+def migration_impact(dep: "Deployment", shadow: Allocation,
+                     achievable_after: float) -> MigrationImpact:
+    stages = dep.profile.stages
+    return MigrationImpact(
+        hops_before=hop_pair_count(dep.allocation, stages),
+        hops_after=hop_pair_count(shadow, stages),
+        achievable_before=dep.achievable_gbps,
+        achievable_after=achievable_after,
+        nics_before=dep.allocation.num_nics_used(),
+        nics_after=shadow.num_nics_used())
+
+
 def _pack_order(dep: "Deployment", pool: Pool) -> List[str]:
     """Candidate destination NICs, best packing candidates first: most free
     units of the kinds this deployment needs, then most free bandwidth."""

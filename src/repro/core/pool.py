@@ -119,6 +119,11 @@ class Pool:
         # (deploy / scale / failover / terminate). It is attribution only:
         # `free` above stays the single source of truth for capacity.
         self.usage: Dict[str, Dict[str, int]] = {}
+        # Per-tenant quota rows beside the usage ledger (ISSUE 4): what each
+        # tenant is *entitled* to, written by the ResourceGovernor when a
+        # quota is declared. Attribution/reporting only — enforcement lives
+        # in the governor's verdicts, never down here in the pool.
+        self.quota: Dict[str, Dict[str, float]] = {}
 
     def names(self) -> List[str]:
         return [n for n, st in self.nics.items() if st.alive]
@@ -155,6 +160,24 @@ class Pool:
 
     def clear_usage(self, tenant: str) -> None:
         self.usage.pop(tenant, None)
+
+    # -- per-tenant quota rows (QoS governor, ISSUE 4) ------------------------
+    def set_quota(self, tenant: str, max_units: Optional[int] = None,
+                  max_gbps: Optional[float] = None,
+                  weight: float = 1.0) -> None:
+        """Record one tenant's entitlement beside its usage row."""
+        row: Dict[str, float] = {"weight": float(weight)}
+        if max_units is not None:
+            row["max_units"] = float(max_units)
+        if max_gbps is not None:
+            row["max_gbps"] = float(max_gbps)
+        self.quota[tenant] = row
+
+    def clear_quota(self, tenant: str) -> None:
+        self.quota.pop(tenant, None)
+
+    def quota_row(self, tenant: str) -> Dict[str, float]:
+        return dict(self.quota.get(tenant, {}))
 
     def reserved_units(self, tenant: Optional[str] = None) -> int:
         """Attributed units held by one tenant (or all tenants combined),

@@ -17,10 +17,16 @@ Each tick the runtime:
      replicates state to backup NICs (Appendix D).
 
 The autoscaler is fast-attack / slow-decay: demand estimates jump to the
-observed offered rate instantly but decay with EWMA smoothing, and the
-provision target is clamped to [floor_frac * contract, contract] with
-multiplicative headroom. Scaling calls go through the controller's
-``adaptive_scale`` (Algorithm 1 demand recompute + incremental placement).
+observed load (offered + queued backlog drain — the reactive loop scales on
+what is waiting, not just what arrived) instantly but decay with EWMA
+smoothing. Every capacity decision routes through the controller's
+``ResourceGovernor`` (core.qos): the governor's ``ScaleVerdict`` applies
+the tenant's quota, burst credits, and the pool's per-tick headroom ledger
+(a partial grant under contention), and the runtime merely executes it via
+``adaptive_scale``. Per-tick dispatch is the governor's deficit-weighted
+round-robin over tenant ingress queues: the telemetry backlog is the queue
+depth scheduled against, so an over-quota tenant queues behind its own
+deficit instead of triggering pool-wide rescales.
 """
 from __future__ import annotations
 
@@ -29,12 +35,15 @@ from typing import Dict, List, Optional, Set, Tuple
 
 import jax
 
+from repro.apps.profiles import PKT_BITS
 from repro.core.controller import MeiliController
 from repro.core.executor import ParallelDataPlane
 from repro.service.tenants import AdmissionError, TenantRegistry
 from repro.service.telemetry import (ClusterTick, TelemetryLog, TenantTick,
                                      hop_penalties, measure_tenant_tick)
 from repro.service.workload import ScenarioWorkload
+
+PKT_BYTES_F = PKT_BITS / 8.0
 
 
 @dataclasses.dataclass
@@ -58,6 +67,10 @@ class RuntimeConfig:
     warmup_ticks: int = 2
     max_violation_frac: float = 0.05
     max_sim_seqs: int = 96
+    # Shared ingress budget the governor's DWRR splits across tenants
+    # (Gbps). None = uncapped: every tenant drains to its own placed
+    # capacity and DWRR only decides the dispatch order (pre-QoS behavior).
+    ingress_gbps: Optional[float] = None
 
 
 class ServiceRuntime:
@@ -76,7 +89,8 @@ class ServiceRuntime:
         self._dp_stats: Dict[str, Dict[str, int]] = {}
         self._demand: Dict[str, float] = {}      # EWMA demand estimate
         self._cooldown: Dict[str, int] = {}
-        self._backlog: Dict[str, float] = {}
+        self._backlog: Dict[str, float] = {}     # ingress queue depth (pkts)
+        self._granted: Dict[str, float] = {}     # last governor grant (Gbps)
         self._grace_until: Dict[str, int] = {}
         self._force_rescale: Set[str] = set()
         self._events: Dict[str, str] = {}        # tenant -> event this tick
@@ -131,43 +145,48 @@ class ServiceRuntime:
             self._planes[tenant] = dp
         return dp
 
-    # -- closed-loop autoscaler ------------------------------------------------
+    # -- closed-loop autoscaler (capacity decisions live in the governor) ------
+    def _queued_gbps(self, tenant: str) -> float:
+        """The backlog as a drain rate: queued packets expressed in Gbps if
+        they were to drain within one tick — the autoscaler's pressure
+        signal covers offered + queued, not offered alone."""
+        return (self._backlog.get(tenant, 0.0) * PKT_BITS
+                / max(self.cfg.dt_s, 1e-9) / 1e9)
+
     def _autoscale(self, tenant: str, offered: float) -> None:
         spec = self.registry.specs[tenant]
         dep = self.registry.deployment(tenant)
-        prev = self._demand.get(tenant, offered)
-        est = offered if offered >= prev else (
-            (1.0 - self.cfg.decay) * prev + self.cfg.decay * offered)
+        cfg = self.cfg
+        load = offered + self._queued_gbps(tenant)
+        prev = self._demand.get(tenant, load)
+        est = load if load >= prev else (
+            (1.0 - cfg.decay) * prev + cfg.decay * load)
         self._demand[tenant] = est
-        if not self.cfg.autoscale:
+        if not cfg.autoscale:
+            self._granted[tenant] = dep.target_gbps
             return
-        contract = spec.sla.target_gbps
-        desired = min(contract, max(self.cfg.floor_frac * contract,
-                                    est * self.cfg.headroom))
-        cooldown = self._cooldown.get(tenant, 0)
-        forced = tenant in self._force_rescale
-        gap = abs(desired - dep.target_gbps) / max(contract, 1e-9)
-        # Capacity pressure: offered load is eating into the *placed*
-        # capacity (demand-granular targets can sit below the next placement
-        # step) — re-target above the offered rate before backlog builds.
-        pressure = offered > 0.92 * dep.achievable_gbps
-        if pressure:
-            desired = min(contract, max(desired, offered * self.cfg.headroom))
-        # Fast-attack: scale-UP is never blocked by the cooldown (a blocked
-        # scale-up is an SLO violation waiting to happen); the cooldown only
-        # rate-limits scale-downs so troughs don't thrash the allocator.
-        scaling_up = desired > dep.target_gbps + 1e-9
-        if forced or (scaling_up and (pressure
-                                      or gap > self.cfg.rescale_threshold)) \
-                or (not scaling_up and cooldown <= 0
-                    and gap > self.cfg.rescale_threshold):
-            self.ctrl.adaptive_scale(tenant, desired)
-            self._cooldown[tenant] = self.cfg.scale_cooldown_ticks
+        need = dep.app.resource_needs()
+        verdict = self.ctrl.governor.scale_verdict(
+            tenant, est_gbps=est, offered_gbps=load,
+            contract_gbps=spec.sla.target_gbps,
+            current_gbps=dep.target_gbps,
+            achievable_gbps=dep.achievable_gbps,
+            unit_gbps=dep.profile.t_p,
+            stage_kinds=sorted(need.values()),    # one entry PER stage
+            held_units=self.ctrl.pool.reserved_units(tenant),
+            headroom=cfg.headroom, floor_frac=cfg.floor_frac,
+            rescale_threshold=cfg.rescale_threshold,
+            cooldown_active=self._cooldown.get(tenant, 0) > 0,
+            forced=tenant in self._force_rescale)
+        self._granted[tenant] = verdict.target_gbps
+        if verdict.rescale:
+            self.ctrl.adaptive_scale(tenant, verdict.target_gbps)
+            self._cooldown[tenant] = cfg.scale_cooldown_ticks
             self._force_rescale.discard(tenant)
         else:
             # Clamp at zero: letting the counter march negative would make a
             # later cooldown reset meaningless after long quiet stretches.
-            self._cooldown[tenant] = max(0, cooldown - 1)
+            self._cooldown[tenant] = max(0, self._cooldown.get(tenant, 0) - 1)
 
     # -- failure injection -----------------------------------------------------
     def inject_failure(self, nic: Optional[str] = None) -> Tuple[str, List[str]]:
@@ -217,15 +236,43 @@ class ServiceRuntime:
                 self.ctrl.defragment(max_migrations=cfg.defrag_max_moves,
                                      min_score=cfg.defrag_min_score)
 
+            gov = self.ctrl.governor
+            active = [t for t in self.registry.active()
+                      if t in self.workload.specs]
+            gov.begin_tick(self.ctrl.pool, active)
+
+            # Pass 1 — demand estimation + governor-granted scaling, in
+            # priority order: under contention the headroom ledger is drawn
+            # down heaviest-weight-first, so partial grants favor the
+            # contracts the pool values most.
+            offered_now: Dict[str, float] = {
+                t: self.workload.offered_gbps(t, tick) for t in active}
+            for tenant in gov.priority_order(active):
+                self._autoscale(tenant, offered_now[tenant])
+
+            # Pass 2 — the governor's DWRR over ingress queues decides the
+            # dispatch order and, when a shared ingress budget is set, each
+            # tenant's service share for the tick (backlog = queue depth).
+            queues: Dict[str, float] = {}
+            rate_caps: Dict[str, float] = {}
+            for tenant in active:
+                dep = self.registry.deployment(tenant)
+                arriving = (offered_now[tenant] * 1e9 / PKT_BITS * cfg.dt_s
+                            + self._backlog.get(tenant, 0.0))
+                queues[tenant] = arriving * PKT_BYTES_F
+                rate_caps[tenant] = (max(0.0, dep.achievable_gbps)
+                                     * 1e9 / 8.0 * cfg.dt_s)
+            ingress = (None if cfg.ingress_gbps is None
+                       else cfg.ingress_gbps * 1e9 / 8.0 * cfg.dt_s)
+            order, served_bytes = gov.dwrr_schedule(queues, rate_caps,
+                                                    capacity_bytes=ingress)
+
             cluster_achieved = 0.0
             cluster_nics: set = set()
             cluster_hops = 0
-            for tenant in self.registry.active():
-                if tenant not in self.workload.specs:
-                    continue
+            for tenant in order:
                 spec = self.registry.specs[tenant]
-                offered = self.workload.offered_gbps(tenant, tick)
-                self._autoscale(tenant, offered)
+                offered = offered_now[tenant]
                 dep = self.registry.deployment(tenant)
 
                 if cfg.dataplane_every and tick % cfg.dataplane_every == 0:
@@ -240,7 +287,8 @@ class ServiceRuntime:
                 p50, p99, achieved, backlog = measure_tenant_tick(
                     dep, offered, cfg.dt_s,
                     self._backlog.get(tenant, 0.0), cfg.max_sim_seqs,
-                    hop_pen=hop_pen)
+                    hop_pen=hop_pen,
+                    served_pkts=served_bytes[tenant] / PKT_BYTES_F)
                 self._backlog[tenant] = backlog
                 cluster_achieved += achieved
 
@@ -258,7 +306,9 @@ class ServiceRuntime:
                     units=self.ctrl.pool.reserved_units(tenant),
                     slo_ok=slo_ok, in_grace=in_grace,
                     event=self._events.pop(tenant, ""),
-                    hop_pairs=tenant_hops, nics_used=len(tenant_nics)))
+                    hop_pairs=tenant_hops, nics_used=len(tenant_nics),
+                    granted_gbps=self._granted.get(tenant, dep.target_gbps),
+                    backlog_pkts=backlog))
 
                 if (spec.backup_nic is not None
                         and cfg.replicate_every

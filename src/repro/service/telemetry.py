@@ -36,6 +36,8 @@ class TenantTick:
     event: str = ""              # "scale" / "failover" / "migrate" / ...
     hop_pairs: int = 0           # consecutive stages on disjoint NICs
     nics_used: int = 0           # NICs this tenant's placement spans
+    granted_gbps: float = 0.0    # governor-granted provision target (QoS)
+    backlog_pkts: float = 0.0    # ingress queue depth carried out of the tick
 
 
 @dataclasses.dataclass
@@ -126,19 +128,24 @@ def hop_penalties(dep: Deployment) -> Dict[Tuple[str, str], float]:
 
 def measure_tenant_tick(dep: Deployment, offered_gbps: float, dt_s: float,
                         backlog_pkts: float, max_sim_seqs: int = 96,
-                        hop_pen: Optional[Dict[Tuple[str, str], float]] = None
+                        hop_pen: Optional[Dict[Tuple[str, str], float]] = None,
+                        served_pkts: Optional[float] = None
                         ) -> Tuple[float, float, float, float]:
     """One tick of the latency/throughput model.
 
     Returns (p50_s, p99_s, achieved_gbps, new_backlog_pkts). Achieved rate is
-    capped by the deployment's placed capacity; the backlog models demand the
-    placement could not serve this tick (drained when capacity exceeds
-    offered load again).
+    capped by the deployment's placed capacity — and, when the governor's
+    DWRR scheduler granted this tenant a service share (``served_pkts``), by
+    that grant. The backlog models demand the placement could not serve this
+    tick (drained when capacity exceeds offered load again); it is the
+    ingress queue depth the governor schedules against next tick.
     """
     cap_pps = max(0.0, dep.achievable_gbps) * 1e9 / PKT_BITS
     off_pps = max(0.0, offered_gbps) * 1e9 / PKT_BITS
     arriving = off_pps * dt_s + backlog_pkts
     served = min(arriving, cap_pps * dt_s)
+    if served_pkts is not None:
+        served = min(served, max(0.0, served_pkts))
     new_backlog = arriving - served
     achieved_gbps = (served / dt_s) * PKT_BITS / 1e9 if dt_s > 0 else 0.0
 

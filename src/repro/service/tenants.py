@@ -22,6 +22,7 @@ from repro.apps.profiles import paper_profile
 from repro.core.controller import Deployment, MeiliController
 from repro.core.graph import MeiliApp
 from repro.core.profiler import AppProfile
+from repro.core.qos import TenantQuota, quota_from_sla
 
 
 class AdmissionError(RuntimeError):
@@ -44,6 +45,13 @@ class TenantSpec:
     backup_nic: Optional[str] = None   # Appendix-D failover replication target
     arrive_tick: int = 0               # churn: when the tenant shows up
     depart_tick: Optional[int] = None  # churn: when it leaves (None = never)
+    # QoS quota (ISSUE 4): caps + burst credits + fair-share weight enforced
+    # by the ResourceGovernor. None derives the default from the SLA — the
+    # contract is the cap, the priority is the weight (quota_from_sla).
+    quota: Optional[TenantQuota] = None
+
+    def effective_quota(self) -> TenantQuota:
+        return self.quota if self.quota is not None else quota_from_sla(self.sla)
 
 
 class TenantRegistry:
@@ -62,6 +70,9 @@ class TenantRegistry:
         # two tenants may run the same application independently.
         spec.app.name = spec.name
         self.specs[spec.name] = spec
+        # Declare the tenant's quota to the governor up front: admission,
+        # scaling, and dispatch all consult the same policy rows.
+        self.controller.governor.register(spec.name, spec.effective_quota())
 
     def admit(self, name: str, strict: bool = True) -> Deployment:
         spec = self.specs[name]
@@ -70,10 +81,11 @@ class TenantRegistry:
         dep = self.controller.submit(spec.app, spec.sla.target_gbps,
                                      spec.profile, backup_nic=spec.backup_nic,
                                      tenant=name)
-        if strict and not dep.allocation.satisfied():
-            unmet = dict(dep.allocation.unmet)
+        verdict = self.controller.governor.admission_verdict(name,
+                                                             dep.allocation)
+        if strict and not verdict.admitted:
             self.controller.terminate(spec.app.name)
-            self.rejected[name] = f"unplaceable at contract: {unmet}"
+            self.rejected[name] = verdict.reason
             raise AdmissionError(f"{name}: {self.rejected[name]}")
         self.admitted[name] = dep
         return dep
@@ -93,6 +105,7 @@ class TenantRegistry:
     def evict(self, name: str) -> None:
         if name in self.admitted:
             self.controller.terminate(name)
+            self.controller.governor.forget(name)
             del self.admitted[name]
 
     def pending(self, tick: int) -> List[str]:

@@ -10,6 +10,10 @@ Patterns:
   constant  — flat at peak_gbps;
   bursty    — on/off square wave (duty cycle, phase-staggered per tenant);
   diurnal   — raised-cosine day/night cycle between trough_frac and 1.0;
+  flash     — square wave like bursty, but the "on" window multiplies peak
+              by surge_frac (>1 = a flash crowd exceeding the contract);
+              run un-staggered it models correlated cross-tenant bursts
+              with no multiplexing headroom;
 Flow sizes are heavy-tailed (Pareto weights over the tenant's flow space),
 so a few elephant flows carry most packets and the TO's spill path stays
 exercised. Tenant churn (arrive/depart) lives on TenantSpec and is driven by
@@ -41,6 +45,7 @@ class TrafficSpec:
     jitter_frac: float = 0.03     # deterministic multiplicative jitter
     num_flows: int = 24
     tail_alpha: float = 1.3       # Pareto shape (smaller = heavier tail)
+    surge_frac: float = 1.0       # flash: on-window multiplier over peak
 
 
 class ScenarioWorkload:
@@ -68,6 +73,10 @@ class ScenarioWorkload:
         elif sp.pattern == "diurnal":
             x = 0.5 * (1.0 - math.cos(2.0 * math.pi * t / sp.period_ticks))
             rate = sp.peak_gbps * (sp.trough_frac + (1.0 - sp.trough_frac) * x)
+        elif sp.pattern == "flash":
+            on = t < sp.duty * sp.period_ticks
+            rate = (sp.peak_gbps * sp.surge_frac if on
+                    else sp.peak_gbps * sp.trough_frac)
         else:
             raise ValueError(f"unknown traffic pattern {sp.pattern!r}")
         if sp.jitter_frac > 0:
@@ -135,10 +144,47 @@ def churn(contracts: Dict[str, float], seed: int = 0) -> ScenarioWorkload:
                       period_ticks=20, trough_frac=0.15, stagger=4)
 
 
+def flash_crowd(contracts: Dict[str, float], seed: int = 0,
+                crowd: Optional[str] = None,
+                surge: float = 2.5) -> ScenarioWorkload:
+    """Correlated cross-tenant bursts with NO multiplexing headroom: every
+    tenant peaks in the same window (no stagger), and one *crowd* tenant
+    (default: the largest contract) surges to ``surge``x its contract —
+    demand its quota does not cover. The QoS isolation scenario: without a
+    governor the crowd's over-scaling strips the headroom the in-quota
+    tenants need to re-climb out of their troughs; with the governor the
+    crowd queues behind its own quota and degrades only itself."""
+    if crowd is None:
+        crowd = max(contracts, key=lambda t: (contracts[t], t))
+    specs = {}
+    for t, peak in contracts.items():
+        specs[t] = TrafficSpec(pattern="flash", peak_gbps=peak,
+                               period_ticks=24, duty=0.5, trough_frac=0.25,
+                               phase_ticks=0,     # correlated: all together
+                               surge_frac=surge if t == crowd else 1.0)
+    return ScenarioWorkload(specs, seed=seed)
+
+
+def adversarial_churn(contracts: Dict[str, float],
+                      seed: int = 0) -> ScenarioWorkload:
+    """Admission pressure at peak: correlated near-contract load (high duty,
+    no stagger, shallow troughs) so churn arrivals — wave-2 tenants of
+    ``churn_tenant_mix`` land mid-run — must be admitted while the pool is
+    as full as it ever gets. Strict admission + the governor's headroom
+    ledger decide who gets in; nobody already admitted may be harmed."""
+    specs = {}
+    for t, peak in contracts.items():
+        specs[t] = TrafficSpec(pattern="bursty", peak_gbps=peak,
+                               period_ticks=16, duty=0.75, trough_frac=0.5,
+                               phase_ticks=0)     # correlated peaks
+    return ScenarioWorkload(specs, seed=seed)
+
+
 SCENARIOS = {"steady": steady, "bursty": bursty, "diurnal": diurnal,
-             "churn": churn}
+             "churn": churn, "flash_crowd": flash_crowd,
+             "adversarial_churn": adversarial_churn}
 
 
 def make_scenario(name: str, contracts: Dict[str, float],
-                  seed: int = 0) -> ScenarioWorkload:
-    return SCENARIOS[name](contracts, seed=seed)
+                  seed: int = 0, **kw) -> ScenarioWorkload:
+    return SCENARIOS[name](contracts, seed=seed, **kw)

@@ -80,5 +80,11 @@ def test_bench_service_fast_writes_json(tmp_path, capsys):
     assert set(payload["efficiency"]) == set(MODES)
     assert payload["ratios"]["pooled_vs_standalone"] >= 2.0
     assert payload["ratios"]["pooled_vs_microservice"] >= 1.2
+    # the --fast smoke covers both QoS scenarios (ISSUE 4)
+    assert payload["qos"]["pass"] is True
+    assert payload["qos"]["isolation"]["innocents_broken_off"]
+    assert payload["adversarial_churn"]["pass"] is True
     rows = capsys.readouterr().out
     assert "service_eff_pooled" in rows
+    assert "service_qos" in rows
+    assert "service_adversarial_churn" in rows
