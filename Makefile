@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-slow bench bench-dataplane bench-service bench-defrag bench-qos
+.PHONY: test test-slow bench bench-dataplane bench-service bench-defrag bench-qos bench-chaos
 
 # Tier-1 suite. pytest.ini excludes `slow` tests by default (the small
 # dry-run compiles a full train step and can take minutes), so this can
@@ -36,3 +36,10 @@ bench-defrag:
 bench-qos:
 	python -m benchmarks.bench_service --scenario flashcrowd
 	python -m benchmarks.bench_service --scenario adversarial
+
+# Chaos fault-injection A/B (ISSUE 6): identical compound fault plan
+# (flap, gray failure, mid-migration crash, rack outage, repair wave) run
+# with recovery on vs off; merges the `chaos` record into
+# BENCH_service.json.
+bench-chaos:
+	python -m benchmarks.bench_service --scenario chaos

@@ -34,6 +34,9 @@ import time
 
 from benchmarks.common import row
 from repro.core.controller import MeiliController
+from repro.core.faults import (FLAP, GRAY, MID_MIGRATION, RACK, REVIVE,
+                               ChaosEngine, FaultEvent, FaultPlan,
+                               RecoveryConfig)
 from repro.core.pool import paper_cluster
 from repro.core.qos import ResourceGovernor
 from repro.service.efficiency import MODES, run_comparison
@@ -48,6 +51,13 @@ CHURN_TICKS = 96
 CHURN_FAST_TICKS = 48
 QOS_TICKS = 96
 QOS_FAST_TICKS = 48
+CHAOS_TICKS = 110
+CHAOS_FAST_TICKS = 48
+
+# The chaos A/B runs on a 2-rack 8-NIC pool: rack1 (half of every NIC
+# class) is the correlated-outage domain, rack0 hosts the gray failure.
+CHAOS_POOL = dict(n_bf2=4, n_bf1=2, n_pensando=2, racks=2)
+CHAOS_RACK = "rack1"
 
 # The QoS isolation A/B runs on a pool with no multiplexing headroom (the
 # flash-crowd premise): a 6-NIC rack that admits the 6-tenant mix at
@@ -75,6 +85,10 @@ def run(emit=print, fast: bool = False, seed: int = 0,
                                                     seed=seed)}
         res["pass"] = res["adversarial_churn"]["pass"]
         return res
+    if scenario == "chaos":
+        res = {"chaos": run_chaos(emit=emit, fast=fast, seed=seed)}
+        res["pass"] = res["chaos"]["pass"]
+        return res
     cfg = RuntimeConfig() if not fast else RuntimeConfig(
         dataplane_every=0, max_sim_seqs=48)
     res = run_comparison(ticks=FAST_TICKS if fast else TICKS, cfg=cfg,
@@ -98,6 +112,7 @@ def run(emit=print, fast: bool = False, seed: int = 0,
     res["qos"] = run_qos(emit=emit, fast=fast, seed=seed)
     res["adversarial_churn"] = run_adversarial(emit=emit, fast=fast,
                                                seed=seed)
+    res["chaos"] = run_chaos(emit=emit, fast=fast, seed=seed)
     res["bars"] = BARS
     res["pass"] = check(res)
     return res
@@ -304,13 +319,141 @@ def run_adversarial(emit=print, fast: bool = False, seed: int = 0) -> dict:
     return rec
 
 
+def _chaos_mix():
+    """The evaluation mix with backups remapped onto the chaos pool's two
+    BF-1s (the default mix names bf1-2/bf1-3, which do not exist here)."""
+    backups = ("bf1-0", "bf1-1")
+    return [dataclasses.replace(s, backup_nic=backups[i % len(backups)])
+            for i, s in enumerate(default_tenant_mix())]
+
+
+def _chaos_plan(ticks: int, flap_nic: str, gray_nic: str) -> FaultPlan:
+    """The compound fault sequence, identical on both arms: an early link
+    flap, a silent gray degradation on a busy surviving-rack NIC, a crash
+    landed inside a make-before-break migration window, a correlated rack
+    outage taking half the pool, and a late repair wave (rack revive + the
+    gray NIC replaced)."""
+    T = ticks
+    return FaultPlan([
+        FaultEvent(tick=max(2, int(0.11 * T)), kind=FLAP, nic=flap_nic,
+                   duration_ticks=max(2, T // 16)),
+        FaultEvent(tick=int(0.28 * T), kind=GRAY, nic=gray_nic,
+                   fraction=0.25),
+        FaultEvent(tick=int(0.44 * T), kind=MID_MIGRATION),
+        FaultEvent(tick=int(0.55 * T), kind=RACK, rack=CHAOS_RACK),
+        FaultEvent(tick=int(0.72 * T), kind=REVIVE, rack=CHAOS_RACK),
+        FaultEvent(tick=int(0.72 * T), kind=REVIVE, nic=gray_nic),
+    ])
+
+
+def _run_chaos_arm(recovery_on: bool, ticks: int, seed: int) -> dict:
+    """One arm of the chaos A/B: same mix, same seeded traffic, same fault
+    plan; only the recovery policy differs. ON = park + backoff re-admission
+    + brownout partial grants + gray-failure detection; OFF = the legacy
+    eviction-or-nothing baseline with no detection."""
+    cfg = RuntimeConfig(dataplane_every=0, max_sim_seqs=48,
+                        gray_detect=recovery_on)
+    mix = _chaos_mix()
+    ctrl = MeiliController(paper_cluster(**CHAOS_POOL))
+    registry = TenantRegistry(ctrl)
+    for spec in mix:
+        registry.register(spec)
+    wl = make_scenario("chaos", contracts(mix), seed=seed)
+    rec_cfg = (RecoveryConfig(park=True, brownout=True, seed=seed)
+               if recovery_on else RecoveryConfig(park=False, brownout=False))
+    rt = ServiceRuntime(ctrl, registry, wl, cfg, recovery=rec_cfg)
+    registry.admit_all()
+    # Fault targets from the deterministic initial placement (identical on
+    # both arms): the flap hits the busiest NIC overall, the gray failure
+    # the busiest *surviving-rack* NIC that is not the flap target — so the
+    # gray NIC carries tenants whose achieved throughput can betray it.
+    usage: dict = {}
+    for dep in ctrl.deployments.values():
+        for n, nic_row in dep.allocation.A.items():
+            usage[n] = usage.get(n, 0) + sum(nic_row.values())
+    flap_nic = max(usage, key=lambda n: (usage[n], n))
+    rack0 = [n for n in ctrl.pool.rack_members("rack0") if n != flap_nic]
+    gray_nic = max(rack0, key=lambda n: (usage.get(n, 0), n))
+    engine = ChaosEngine(_chaos_plan(ticks, flap_nic, gray_nic))
+    rt.run(ticks, chaos=engine)
+    ctrl.check_ledger()     # the sentinel also ran after every fault
+    tele = rt.telemetry
+    return {
+        "recovery_on": recovery_on,
+        "flap_nic": flap_nic,
+        "gray_nic": gray_nic,
+        "slo_ticks": tele.slo_tick_count(cfg.warmup_ticks),
+        "permanent_evictions": sorted(set(rt.recovery.evicted)),
+        "parked_events": len(tele.faults("parked")),
+        "readmissions": len(rt.recovery.readmissions),
+        "still_parked": sorted(rt.recovery.parked),
+        "mttr_ticks": rt.recovery.mean_time_to_recover(),
+        "brownout_ticks": len({f.tick for f in tele.faults("degraded")}),
+        "gray_probations": sorted({f.nic for f in
+                                   tele.faults("gray_probation")}),
+        "faults_injected": len(engine.fired),
+        "alive_tenants": len(rt.alive_tenants()),
+        "ledger_clean": True,
+    }
+
+
+def run_chaos(emit=print, fast: bool = False, seed: int = 0) -> dict:
+    """Chaos fault-injection A/B (ISSUE 6 acceptance): under an identical
+    compound fault plan, recovery-on must strictly dominate recovery-off —
+    more tenant-ticks of SLO-compliant service, fewer permanent evictions
+    (off must demonstrably lose >= 1 tenant for good), and a finite mean
+    time-to-recover with every parked tenant re-admitted by run end. The
+    invariant sentinel validates the ledger after every injected fault."""
+    ticks = CHAOS_FAST_TICKS if fast else CHAOS_TICKS
+    on = _run_chaos_arm(True, ticks, seed)
+    off = _run_chaos_arm(False, ticks, seed)
+    rec = {
+        # self-describing (mergeable into a JSON from another mode/seed).
+        "fast": fast,
+        "seed": seed,
+        "ticks": ticks,
+        "pool": dict(CHAOS_POOL),
+        "recovery_on": on,
+        "recovery_off": off,
+        "dominance": {
+            "slo_ticks_on_vs_off": [on["slo_ticks"], off["slo_ticks"]],
+            "permanent_evictions_on_vs_off": [
+                len(on["permanent_evictions"]),
+                len(off["permanent_evictions"])],
+            "all_parked_readmitted_on": not on["still_parked"],
+            "mttr_ticks_on": on["mttr_ticks"],
+        },
+    }
+    recovered = (not on["still_parked"]
+                 and (on["parked_events"] == 0
+                      or on["mttr_ticks"] is not None))
+    rec["pass"] = bool(
+        on["slo_ticks"] > off["slo_ticks"]
+        and len(on["permanent_evictions"]) < len(off["permanent_evictions"])
+        and off["permanent_evictions"]
+        and recovered)
+    emit(row("service_chaos_slo_ticks", 0,
+             f"on{on['slo_ticks']}_off{off['slo_ticks']}"))
+    emit(row("service_chaos_evictions", 0,
+             f"on{len(on['permanent_evictions'])}"
+             f"_off{len(off['permanent_evictions'])}"))
+    emit(row("service_chaos_recovery", 0,
+             f"parked{on['parked_events']}_readmitted{on['readmissions']}"
+             f"_mttr{on['mttr_ticks'] if on['mttr_ticks'] is not None else 'na'}"))
+    emit(row("service_chaos_brownout", 0,
+             f"{on['brownout_ticks']}ticks_gray="
+             f"{','.join(on['gray_probations']) or 'none'}"))
+    emit(row("service_chaos", 0, f"pass={rec['pass']}"))
+    return rec
+
+
 def check(res: dict) -> bool:
     ok = all(res["ratios"][k] >= bar for k, bar in BARS.items())
     for rec in res["scenarios"].values():
         ok = ok and all(rec[m]["slo_pass"] for m in MODES)
         if "failover" in rec:
             ok = ok and rec["failover"]["survived"]
-    for extra in ("defrag", "qos", "adversarial_churn"):
+    for extra in ("defrag", "qos", "adversarial_churn", "chaos"):
         if extra in res:
             ok = ok and res[extra]["pass"]
     return ok
@@ -322,7 +465,8 @@ def main(argv=None) -> None:
                     help="smoke mode: fewer ticks, analytic model only")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scenario",
-                    choices=("full", "churn", "flashcrowd", "adversarial"),
+                    choices=("full", "churn", "flashcrowd", "adversarial",
+                             "chaos"),
                     default="full",
                     help="churn = only the defragmentation A/B "
                          "(make bench-defrag); flashcrowd = only the QoS "
@@ -346,7 +490,7 @@ def main(argv=None) -> None:
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         **res,
     }
-    partial_keys = {"churn": "defrag", "flashcrowd": "qos",
+    partial_keys = {"churn": "defrag", "flashcrowd": "qos", "chaos": "chaos",
                     "adversarial": "adversarial_churn"}
     if args.scenario in partial_keys:
         # keep the full-comparison numbers already on disk; merge the new

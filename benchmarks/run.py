@@ -12,7 +12,8 @@ Prints ``name,us_per_call,derived`` CSV rows. Mapping:
   bench_dataplane    -> fused data-plane pps (ISSUE 1; writes BENCH_dataplane.json)
   bench_service      -> Meili-Serve efficiency modes + defrag A/B (ISSUE 2/3)
                         + QoS flash-crowd isolation A/B and adversarial-churn
-                        records (ISSUE 4); writes BENCH_service.json
+                        records (ISSUE 4) + chaos fault-injection A/B with
+                        recovery on/off (ISSUE 6); writes BENCH_service.json
 
 Run one module headlessly:   python -m benchmarks.bench_dataplane
 Run everything:              python -m benchmarks.run   (or: make bench)

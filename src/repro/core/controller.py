@@ -49,6 +49,9 @@ class Deployment:
     achievable_gbps: float
     backup_nic: Optional[str] = None
     state_snapshot: Optional[dict] = None
+    # StateService.version at the last snapshot (None = never replicated):
+    # the dirty flag that lets unchanged state skip the full re-traverse.
+    replica_version: Optional[int] = None
     tenant: Optional[str] = None      # service-runtime owner (defaults to app name)
 
     def nics_used(self) -> List[str]:
@@ -97,6 +100,10 @@ class MeiliController:
         # layered on top can react (rebuild data planes, retry placement)
         # without polling the event log.
         self.hooks: List[Callable[[dict], None]] = []
+        # One-shot chaos hook: fired (then cleared) inside migrate() after the
+        # allocation swap but before flows are re-homed — the exposed
+        # make-before-break window a mid-migration fault lands in.
+        self.mid_migration_hook: Optional[Callable[[str], None]] = None
 
     def add_hook(self, fn: Callable[[dict], None]) -> None:
         self.hooks.append(fn)
@@ -273,12 +280,19 @@ class MeiliController:
 
     # -- Appendix D: failover -----------------------------------------------------
     def replicate_for_failover(self, app_name: str) -> None:
-        """Periodic state + packet-cache replication to the backup NIC."""
+        """Periodic state + packet-cache replication to the backup NIC.
+
+        Dirty-flag gated: if no state API write landed since the last
+        snapshot (``StateService.version`` unchanged), the snapshot is
+        already current and the full cross-NIC traverse is skipped."""
         dep = self.deployments[app_name]
         if dep.backup_nic is None:
             return
+        if dep.replica_version == self.state.version:
+            return
         entries = self.state.traverse(local=dep.backup_nic)
         dep.state_snapshot = {e.s_name: e.value for e in entries}
+        dep.replica_version = self.state.version
 
     def handle_failure(self, nic: str) -> List[str]:
         """NIC (or its link) failed: re-place affected stage units, restore
@@ -339,7 +353,8 @@ class MeiliController:
     # -- online re-placement / defragmentation (make-before-break) ----------------
     def migrate(self, app_name: str,
                 only_nics: Optional[List[str]] = None,
-                require_improvement: bool = True) -> Optional[dict]:
+                require_improvement: bool = True,
+                forced: bool = False) -> Optional[dict]:
         """Re-place a live deployment onto a better-packed NIC set.
 
         Make-before-break: the destination units are allocated and committed
@@ -348,7 +363,9 @@ class MeiliController:
         and only then is the source placement released. A do-no-harm guard
         rejects any plan that would raise the deployment's hop count or
         lower its achievable throughput — rejected plans leave the pool
-        untouched. Returns the emitted migrate event, or None if no
+        untouched. ``forced`` skips that guard: a probation drain off a
+        gray-failing NIC is worth extra hops, so only placement feasibility
+        gates it. Returns the emitted migrate event, or None if no
         admissible plan exists.
         """
         t0 = self.clock()
@@ -369,7 +386,7 @@ class MeiliController:
             dep, shadow, self._achievable(dep.profile, shadow, demand))
         old_hops, new_hops = impact.hops_before, impact.hops_after
         new_achievable = impact.achievable_after
-        if not self.governor.migration_verdict(
+        if not forced and not self.governor.migration_verdict(
                 hops_before=impact.hops_before, hops_after=impact.hops_after,
                 achievable_before=impact.achievable_before,
                 achievable_after=impact.achievable_after,
@@ -382,19 +399,28 @@ class MeiliController:
         old_alloc = dep.allocation
 
         # Migrate flows via the TO: halt every flow (in-flight packets buffer
-        # in the side ring), then re-home it — same pipeline topology, the
-        # pipelines just live on the destination NICs now.
+        # in the side ring), swap the allocation, release the source units —
+        # then re-home the flows. The window between begin and finish is the
+        # exposed make-before-break state the chaos layer's mid-migration
+        # fault lands in: the one-shot hook below fires with every flow
+        # buffered and the ledger already swapped to the destination, so an
+        # injected failure must drain cleanly through handle_failure while
+        # the hand-off is in flight.
         for f in list(dep.to.flow_table):
             dep.to.begin_migration(f)
-        for f, pid in list(dep.to.flow_table.items()):
-            dep.to.finish_migration(f, dst_pid=pid)
 
-        # BREAK: swap the allocation and release the source units.
         dep.allocation = shadow
         dep.r_s = {s: shadow.units(s) for s in dep.profile.stages}
         dep.achievable_gbps = new_achievable
         release(self.pool, old_alloc, need, dep.profile.t_s)
         self._account(dep)
+
+        if self.mid_migration_hook is not None:
+            hook, self.mid_migration_hook = self.mid_migration_hook, None
+            hook(app_name)
+
+        for f, pid in list(dep.to.flow_table.items()):
+            dep.to.finish_migration(f, dst_pid=pid)
         event = {"t": self.clock(), "event": "migrate", "app": app_name,
                  "tenant": dep.tenant,
                  "nics_before": sorted(n for n, row in old_alloc.A.items()

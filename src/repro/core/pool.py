@@ -38,6 +38,8 @@ class NicSpec:
     accelerators: Dict[str, int]    # accel kind -> count
     bandwidth_gbps: float           # NIC link bandwidth (TPU: ICI egress of the group)
     core_mem_gb: float = 4.0        # paper: 1 core + 4 GB = one resource unit
+    rack: str = "rack0"             # failure domain: one rack outage takes
+                                    # every member down together (chaos layer)
 
     def has(self, resource: str) -> bool:
         if resource == CPU:
@@ -58,6 +60,13 @@ class NicState:
     free: Dict[str, int] = dataclasses.field(default_factory=dict)
     free_bw_gbps: float = 0.0
     alive: bool = True
+    # Gray failure: the NIC silently delivers only this fraction of its
+    # compute/bandwidth. Deliberately invisible to the allocator — `free`,
+    # `take`, `give` are unchanged — so placement math stays oblivious while
+    # achieved throughput (service/telemetry) degrades. Detection must come
+    # from observed behavior, never from reading this field (the runtime's
+    # suspicion scorer treats it as ground truth it cannot see).
+    gray_frac: float = 1.0
 
     def __post_init__(self) -> None:
         if not self.free:
@@ -135,7 +144,34 @@ class Pool:
         self.nics[name].alive = False
 
     def revive(self, name: str) -> None:
-        self.nics[name].alive = True
+        """Bring a NIC back. A revive models a repair/replacement, so any
+        gray degradation is healed too — a revived NIC is a healthy NIC."""
+        st = self.nics[name]
+        st.alive = True
+        st.gray_frac = 1.0
+
+    # -- failure domains + gray degradation (chaos layer) ---------------------
+    def rack_members(self, rack: str) -> List[str]:
+        """Every pool member in one failure domain, alive or not."""
+        return [n for n, st in self.nics.items() if st.spec.rack == rack]
+
+    def mark_gray(self, name: str, fraction: float) -> None:
+        """Silently degrade a NIC to ``fraction`` of its performance. The
+        allocator keeps seeing full capacity — that is the point of a gray
+        failure — only the achieved-throughput model reads the factor."""
+        if not 0.0 < fraction <= 1.0:
+            raise ValueError(f"gray fraction must be in (0, 1], got {fraction}")
+        self.nics[name].gray_frac = fraction
+
+    def clear_gray(self, name: str) -> None:
+        self.nics[name].gray_frac = 1.0
+
+    def capacity_frac(self, nics: Iterable[str]) -> float:
+        """Effective capacity factor of a placement spanning ``nics``: the
+        worst gray factor among them (stages chain through every member, so
+        one sick NIC bottlenecks the whole pipeline)."""
+        fr = [self.nics[n].gray_frac for n in nics if self.nics[n].alive]
+        return min(fr) if fr else 1.0
 
     def total(self, resource: str) -> int:
         return sum(st.spec.capacity(resource) for st in self.nics.values() if st.alive)
@@ -247,26 +283,36 @@ class Pool:
 
 
 def paper_cluster(n_bf2: int = 8, n_bf1: int = 4, n_pensando: int = 4,
-                  bw_gbps: float = 100.0) -> Pool:
+                  bw_gbps: float = 100.0, racks: int = 4) -> Pool:
     """The paper's evaluation cluster (§8 Methodology).
 
     8x BlueField-2 (8 ARM cores, regex + compression), 4x BlueField-1
     (16 cores, no accelerators), 4x Pensando (16 cores, AES + compression),
     all with 100 GbE links. One core per NIC is reserved for the TO
     (paper §8.1), so the usable core counts are 7/15/15.
+
+    NICs are spread over ``racks`` failure domains, each kind in contiguous
+    blocks, so every rack holds a slice of every NIC class — a rack outage
+    removes a proportional cut of each resource kind, never a whole kind.
     """
+    racks = max(1, racks)
+
+    def rack_of(i: int, n: int) -> str:
+        return f"rack{i * racks // max(1, n)}"
+
     nics: List[NicSpec] = []
     for i in range(n_bf2):
         nics.append(NicSpec(f"bf2-{i}", "bf2", cores=7,
                             accelerators={REGEX: 1, COMPRESSION: 1},
-                            bandwidth_gbps=bw_gbps))
+                            bandwidth_gbps=bw_gbps, rack=rack_of(i, n_bf2)))
     for i in range(n_bf1):
         nics.append(NicSpec(f"bf1-{i}", "bf1", cores=15, accelerators={},
-                            bandwidth_gbps=bw_gbps))
+                            bandwidth_gbps=bw_gbps, rack=rack_of(i, n_bf1)))
     for i in range(n_pensando):
         nics.append(NicSpec(f"pensando-{i}", "pensando", cores=15,
                             accelerators={CRYPTO: 1, COMPRESSION: 1},
-                            bandwidth_gbps=bw_gbps))
+                            bandwidth_gbps=bw_gbps,
+                            rack=rack_of(i, n_pensando)))
     return Pool(nics)
 
 
@@ -285,6 +331,7 @@ def tpu_pod_pool(groups: int = 16, chips_per_group: int = 16,
                           REGEX: chips_per_group, CRYPTO: chips_per_group,
                           COMPRESSION: chips_per_group},
             bandwidth_gbps=ici_gbps_per_group,
+            rack=f"rack{i * 4 // max(1, groups)}",
         )
         for i in range(groups)
     ]

@@ -91,6 +91,8 @@ class ScaleVerdict:
     ``pressure``     offered+queued load is eating into placed capacity.
     ``granted_frac`` granted / asked growth (1.0 when nothing was clamped).
     ``burst_credit_spent``  Gbps-ticks drawn from the token bucket.
+    ``brownout``     the grant was clamped by an active brownout (degraded
+                     partial service while parked tenants wait for capacity).
     """
 
     target_gbps: float
@@ -98,6 +100,7 @@ class ScaleVerdict:
     pressure: bool = False
     granted_frac: float = 1.0
     burst_credit_spent: float = 0.0
+    brownout: bool = False
 
 
 class ResourceGovernor:
@@ -128,6 +131,10 @@ class ResourceGovernor:
         # Per-tick free-unit ledger (resource kind -> units), snapshotted by
         # begin_tick and drawn down by scale grants within the tick.
         self._headroom: Optional[Dict[str, int]] = None
+        # Brownout level (None = off): while tenants are parked after a
+        # failure, grants are clamped toward this fraction of contract so the
+        # survivors shed headroom the parked tenants can re-admit into.
+        self._brownout: Optional[float] = None
 
     # -- registration ----------------------------------------------------------
     def bind(self, pool: Pool) -> None:
@@ -178,6 +185,27 @@ class ResourceGovernor:
         for name in pool.names():
             kinds.update(pool[name].free)
         self._headroom = {k: pool.free_total(k) for k in kinds}
+
+    # -- brownout --------------------------------------------------------------
+    def set_brownout(self, level: Optional[float]) -> None:
+        """Enter/leave degraded partial-grant mode. ``level`` is the base
+        fraction of contract the *lowest-weight* tenant is clamped toward;
+        None (or >= 1.0) clears the brownout entirely."""
+        if level is None or level >= 1.0:
+            self._brownout = None
+        else:
+            self._brownout = max(0.05, level)
+
+    def brownout_factor(self, tenant: str) -> float:
+        """Per-tenant grant multiplier under brownout: weight-proportional
+        degradation, ``b + (1 - b) * w / w_max`` — the heaviest contract keeps
+        full service, the lightest degrades to the base level ``b``. 1.0 when
+        no brownout is active."""
+        if not self.enabled or self._brownout is None:
+            return 1.0
+        wmax = max((q.weight for q in self.quotas.values()), default=1.0)
+        b = self._brownout
+        return b + (1.0 - b) * self.weight(tenant) / max(wmax, 1e-9)
 
     # -- admission -------------------------------------------------------------
     def admission_target(self, tenant: str, target_gbps: float) -> float:
@@ -235,6 +263,17 @@ class ResourceGovernor:
             desired = max(desired, offered_gbps * headroom)
         cap, burn = self._quota_cap_gbps(tenant, desired)
         granted = min(desired, cap)
+
+        # Brownout clamp: while tenants are parked post-failure, survivors
+        # are granted only a weight-proportional fraction of contract (never
+        # below the floor) so their scale-downs free the units the parked
+        # tenants need to re-admit. Burst credit cannot buy out a brownout.
+        browned = False
+        bfac = self.brownout_factor(tenant)
+        if bfac < 1.0:
+            bcap = max(floor_frac * contract_gbps, bfac * contract_gbps)
+            if granted > bcap + _EPS:
+                granted, browned, burn = bcap, True, 0.0
 
         # Partial grant under contention: growth beyond the pool's free-unit
         # headroom (or the tenant's max_units quota) is not granted — the
@@ -295,7 +334,7 @@ class ResourceGovernor:
             burn = 0.0
         return ScaleVerdict(target_gbps=granted, rescale=rescale,
                             pressure=pressure, granted_frac=frac,
-                            burst_credit_spent=burn)
+                            burst_credit_spent=burn, brownout=browned)
 
     # -- defrag / migration ----------------------------------------------------
     def migration_verdict(self, *, hops_before: int, hops_after: int,

@@ -150,6 +150,11 @@ class StateService:
             n: StateEngine(n, buckets) for n in nics}
         self.patterns: Dict[str, str] = {}
         self.transport = Transport()
+        # Monotonic write version: bumped by every mutating state API call.
+        # Failover replication compares it against the version it last
+        # snapshotted, so unchanged state is never re-traversed (the dirty
+        # flag — TRAVERSE over every engine is the expensive op here).
+        self.version = 0
 
     def declare(self, name: str, pattern: str) -> None:
         assert pattern in (NON_EXTERNAL_WRITE, FULL_ACCESS)
@@ -157,6 +162,7 @@ class StateService:
 
     # -- full-access ops: apply to all replicas ---------------------------------
     def fstate_add(self, name: str, value: Any) -> None:
+        self.version += 1
         for e in self.engines.values():
             e.table.put(name, value)
             self.transport.write(_nbytes(value))
@@ -165,18 +171,22 @@ class StateService:
         self.fstate_add(name, value)
 
     def fstate_remove(self, name: str) -> None:
+        self.version += 1
         for e in self.engines.values():
             e.table.remove(name)
             self.transport.write(8)
 
     # -- non-external-write ops: local write, global read -----------------------
     def ne_set(self, name: str, value: Any, local: str) -> None:
+        self.version += 1
         self.engines[local].table.put(name, value)
 
     def ne_add(self, name: str, value: Any, local: str) -> None:
+        self.version += 1
         self.engines[local].table.put(name, value)
 
     def ne_remove(self, name: str, local: str) -> bool:
+        self.version += 1
         return self.engines[local].table.remove(name)
 
     # -- GET: same in both patterns — local first, then remote READ -------------

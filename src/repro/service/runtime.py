@@ -38,6 +38,9 @@ import jax
 from repro.apps.profiles import PKT_BITS
 from repro.core.controller import MeiliController
 from repro.core.executor import ParallelDataPlane
+from repro.core.faults import (CRASH, ChaosEngine, FaultEvent, FaultPlan,
+                               GrayFailureDetector, RecoveryConfig,
+                               RecoveryManager)
 from repro.service.tenants import AdmissionError, TenantRegistry
 from repro.service.telemetry import (ClusterTick, TelemetryLog, TenantTick,
                                      hop_penalties, measure_tenant_tick)
@@ -71,12 +74,21 @@ class RuntimeConfig:
     # (Gbps). None = uncapped: every tenant drains to its own placed
     # capacity and DWRR only decides the dispatch order (pre-QoS behavior).
     ingress_gbps: Optional[float] = None
+    # Gray-failure detection (chaos layer): suspicion scoring on sustained
+    # achieved-vs-expected deviation; suspects go on probation and are
+    # drained via forced migration, then quarantined.
+    gray_detect: bool = False
+    gray_threshold: float = 0.3       # suspicion level + per-tick deviation bar
+    gray_min_ticks: int = 3           # consecutive evidence ticks before drain
+    gray_min_load_frac: float = 0.5   # offered/achievable for a tick to count
+                                      # as evidence (idle tenants prove nothing)
 
 
 class ServiceRuntime:
     def __init__(self, controller: MeiliController, registry: TenantRegistry,
                  workload: ScenarioWorkload,
-                 cfg: Optional[RuntimeConfig] = None):
+                 cfg: Optional[RuntimeConfig] = None,
+                 recovery: Optional[RecoveryConfig] = None):
         self.ctrl = controller
         self.registry = registry
         self.workload = workload
@@ -94,6 +106,15 @@ class ServiceRuntime:
         self._grace_until: Dict[str, int] = {}
         self._force_rescale: Set[str] = set()
         self._events: Dict[str, str] = {}        # tenant -> event this tick
+        # Recovery policy: the default reproduces eviction-or-nothing (a
+        # tenant whose placement cannot be restored is permanently evicted);
+        # pass a RecoveryConfig with park=True for graceful degradation +
+        # backoff re-admission.
+        self.recovery = RecoveryManager(
+            self, recovery or RecoveryConfig(park=False, brownout=False))
+        self.gray = (GrayFailureDetector(threshold=self.cfg.gray_threshold,
+                                         min_ticks=self.cfg.gray_min_ticks)
+                     if self.cfg.gray_detect else None)
         controller.add_hook(self._on_event)
 
     # -- controller feedback ---------------------------------------------------
@@ -179,6 +200,12 @@ class ServiceRuntime:
             cooldown_active=self._cooldown.get(tenant, 0) > 0,
             forced=tenant in self._force_rescale)
         self._granted[tenant] = verdict.target_gbps
+        if verdict.brownout:
+            # Degraded partial grant while parked tenants wait for capacity:
+            # surfaced both per-tick (tenant event) and in the fault log.
+            self._events.setdefault(tenant, "degraded")
+            self.telemetry.record_fault(self.tick_now, "degraded",
+                                        tenant=tenant)
         if verdict.rescale:
             self.ctrl.adaptive_scale(tenant, verdict.target_gbps)
             self._cooldown[tenant] = cfg.scale_cooldown_ticks
@@ -189,9 +216,13 @@ class ServiceRuntime:
             self._cooldown[tenant] = max(0, self._cooldown.get(tenant, 0) - 1)
 
     # -- failure injection -----------------------------------------------------
-    def inject_failure(self, nic: Optional[str] = None) -> Tuple[str, List[str]]:
-        """Fail one NIC (the busiest allocated one if unspecified) and run the
-        controller's Appendix-D failover."""
+    def inject_failure(self, nic: Optional[str] = None
+                       ) -> Tuple[Optional[str], List[str]]:
+        """Fail one NIC (the busiest allocated one if unspecified) and run
+        the controller's Appendix-D failover. When no NIC is named and no
+        allocations exist anywhere (e.g. every tenant already evicted), the
+        injection is a no-op — a ``failover_skipped`` fault event is logged
+        and the tick loop continues instead of aborting the run."""
         if nic is None:
             load: Dict[str, int] = {}
             for dep in self.ctrl.deployments.values():
@@ -199,10 +230,61 @@ class ServiceRuntime:
                     if self.ctrl.pool[n].alive:
                         load[n] = load.get(n, 0) + sum(row.values())
             if not load:
-                raise ValueError("inject_failure: no allocated NICs")
+                self.telemetry.record_fault(self.tick_now, "failover_skipped",
+                                            detail="no allocated NICs")
+                return None, []
             nic = max(load, key=load.get)
         impacted = self.ctrl.handle_failure(nic)
         return nic, impacted
+
+    def note_revive(self, nic: str) -> None:
+        """A repaired NIC returned to the pool: the gray detector forgets any
+        suspicion/probation so the NIC starts over with a clean record."""
+        if self.gray is not None:
+            self.gray.clear(nic)
+
+    # -- gray-failure detection ------------------------------------------------
+    def _drain_suspects(self, tick: int) -> None:
+        """Put each newly-suspect NIC on probation and drain it: forced
+        migration of every deployment touching it onto healthy NICs (worth
+        extra hops — the do-no-harm guard is bypassed), falling back to a
+        hard failover for placements the healthy pool cannot re-home whole.
+        Either way the NIC ends quarantined (dead to the allocator) until a
+        revive repairs it.
+
+        At most ONE quarantine per tick: when the only loaded observer of a
+        sick NIC spans several NICs, its deviation convicts the whole
+        placement identically — the evidence cannot localize. Drain the
+        worst suspect and acquit the co-accused; a genuinely sick survivor
+        re-convicts itself within ``min_ticks`` once service settles, while
+        a healthy one is exonerated as soon as its tenants recover."""
+        suspects = self.gray.suspects()
+        if not suspects:
+            return
+        for nic in [max(suspects,
+                        key=lambda n: (self.gray.suspicion.get(n, 0.0), n))]:
+            for other in suspects:
+                if other != nic:
+                    self.gray.clear(other)
+            self.gray.probation.add(nic)
+            self.telemetry.record_fault(tick, "gray_probation", nic=nic)
+            healthy = [n for n in self.ctrl.pool.names()
+                       if n != nic and n not in self.gray.probation]
+            victims = [name for name, dep in self.ctrl.deployments.items()
+                       if nic in dep.nics_used()]
+            for name in victims:
+                self.ctrl.migrate(name, only_nics=healthy, forced=True,
+                                  require_improvement=False)
+            still = [name for name, dep in self.ctrl.deployments.items()
+                     if nic in dep.nics_used()]
+            if still:
+                self.inject_failure(nic)
+                self.telemetry.record_fault(tick, "gray_quarantined", nic=nic,
+                                            detail="escalated to failover")
+            else:
+                self.ctrl.pool.mark_failed(nic)
+                self.telemetry.record_fault(tick, "gray_quarantined", nic=nic)
+            self.recovery.sweep(tick)
 
     # -- churn -----------------------------------------------------------------
     def _churn(self, tick: int) -> None:
@@ -219,14 +301,24 @@ class ServiceRuntime:
 
     # -- the loop --------------------------------------------------------------
     def run(self, num_ticks: int,
-            fail_at: Optional[Tuple[int, Optional[str]]] = None
-            ) -> TelemetryLog:
+            fail_at: Optional[Tuple[int, Optional[str]]] = None,
+            chaos: Optional[ChaosEngine] = None) -> TelemetryLog:
         cfg = self.cfg
+        if fail_at is not None and chaos is None:
+            # Legacy shim: the single-shot failure hook becomes a one-event
+            # chaos plan (same injection point, same failover path).
+            chaos = ChaosEngine(FaultPlan(
+                [FaultEvent(tick=fail_at[0], kind=CRASH, nic=fail_at[1])]))
+        if chaos is not None:
+            chaos.bind(self)
         for _ in range(num_ticks):
             tick = self.tick_now
             self._churn(tick)
-            if fail_at is not None and tick == fail_at[0]:
-                nic, _ = self.inject_failure(fail_at[1])
+            if chaos is not None:
+                chaos.step(tick)
+            # Recovery pass: evict-or-park tenants the faults left dead, run
+            # due re-admission retries, keep the brownout level current.
+            self.recovery.step(tick)
             if (cfg.defrag_every and tick > 0
                     and tick % cfg.defrag_every == 0):
                 # Background re-placement between ticks: migrate the most
@@ -255,12 +347,18 @@ class ServiceRuntime:
             # tenant's service share for the tick (backlog = queue depth).
             queues: Dict[str, float] = {}
             rate_caps: Dict[str, float] = {}
+            gray_scale: Dict[str, float] = {}
             for tenant in active:
                 dep = self.registry.deployment(tenant)
                 arriving = (offered_now[tenant] * 1e9 / PKT_BITS * cfg.dt_s
                             + self._backlog.get(tenant, 0.0))
                 queues[tenant] = arriving * PKT_BYTES_F
+                # A gray NIC bottlenecks every pipeline chained through it:
+                # the service ceiling (not the allocator's view) degrades.
+                gray_scale[tenant] = self.ctrl.pool.capacity_frac(
+                    dep.nics_used())
                 rate_caps[tenant] = (max(0.0, dep.achievable_gbps)
+                                     * gray_scale[tenant]
                                      * 1e9 / 8.0 * cfg.dt_s)
             ingress = (None if cfg.ingress_gbps is None
                        else cfg.ingress_gbps * 1e9 / 8.0 * cfg.dt_s)
@@ -270,6 +368,7 @@ class ServiceRuntime:
             cluster_achieved = 0.0
             cluster_nics: set = set()
             cluster_hops = 0
+            blame: Dict[str, List[float]] = {}   # nic -> observed deviations
             for tenant in order:
                 spec = self.registry.specs[tenant]
                 offered = offered_now[tenant]
@@ -288,7 +387,8 @@ class ServiceRuntime:
                     dep, offered, cfg.dt_s,
                     self._backlog.get(tenant, 0.0), cfg.max_sim_seqs,
                     hop_pen=hop_pen,
-                    served_pkts=served_bytes[tenant] / PKT_BYTES_F)
+                    served_pkts=served_bytes[tenant] / PKT_BYTES_F,
+                    capacity_scale=gray_scale.get(tenant, 1.0))
                 self._backlog[tenant] = backlog
                 cluster_achieved += achieved
 
@@ -298,6 +398,19 @@ class ServiceRuntime:
                 in_grace = tick < self._grace_until.get(tenant, -1)
                 tenant_nics = dep.nics_used()
                 tenant_hops = len(hop_pen)
+                if self.gray is not None:
+                    # Evidence only from loaded tenants: a tick whose offered
+                    # load exercises a meaningful fraction of placed capacity
+                    # either blames every NIC in the placement (service fell
+                    # short) or exonerates them all (full service).
+                    want = min(offered, max(0.0, dep.achievable_gbps))
+                    loaded = (want > 0.1
+                              and offered >= cfg.gray_min_load_frac
+                              * max(dep.achievable_gbps, 1e-9))
+                    if loaded and not in_grace:
+                        dev = max(0.0, 1.0 - achieved / want)
+                        for n in tenant_nics:
+                            blame.setdefault(n, []).append(dev)
                 cluster_nics.update(tenant_nics)
                 cluster_hops += tenant_hops
                 self.telemetry.record(TenantTick(
@@ -321,6 +434,9 @@ class ServiceRuntime:
                 nic_util={r: self.ctrl.pool.utilization(r)
                           for r in ("cpu", "regex", "crypto", "compression")},
                 nics_used=len(cluster_nics), hop_pairs=cluster_hops))
+            if self.gray is not None and blame:
+                self.gray.observe(blame)
+                self._drain_suspects(tick)
             self._events.clear()
             self.tick_now += 1
         return self.telemetry

@@ -50,16 +50,40 @@ class ClusterTick:
     hop_pairs: int = 0           # Σ per-tenant disjoint consecutive pairs
 
 
+@dataclasses.dataclass
+class FaultRecord:
+    """One chaos/recovery event: injected faults (crash/flap/gray/rack/...)
+    and the recovery reactions (parked/readmitted/evicted/degraded/
+    gray_probation/gray_quarantined/failover_skipped)."""
+
+    tick: int
+    kind: str
+    nic: Optional[str] = None
+    tenant: Optional[str] = None
+    detail: str = ""
+
+
 class TelemetryLog:
     def __init__(self):
         self.tenant_ticks: List[TenantTick] = []
         self.cluster_ticks: List[ClusterTick] = []
+        self.fault_events: List[FaultRecord] = []
 
     def record(self, t: TenantTick) -> None:
         self.tenant_ticks.append(t)
 
     def record_cluster(self, c: ClusterTick) -> None:
         self.cluster_ticks.append(c)
+
+    def record_fault(self, tick: int, kind: str, nic: Optional[str] = None,
+                     tenant: Optional[str] = None, detail: str = "") -> None:
+        self.fault_events.append(FaultRecord(tick=tick, kind=kind, nic=nic,
+                                             tenant=tenant, detail=detail))
+
+    def faults(self, kind: Optional[str] = None) -> List[FaultRecord]:
+        if kind is None:
+            return list(self.fault_events)
+        return [f for f in self.fault_events if f.kind == kind]
 
     def series(self, tenant: str) -> List[TenantTick]:
         return [t for t in self.tenant_ticks if t.tenant == tenant]
@@ -81,6 +105,14 @@ class TelemetryLog:
                                    if r["ticks"] else 0.0)
             r["pass"] = r["violation_frac"] <= max_violation_frac
         return out
+
+    def slo_tick_count(self, warmup_ticks: int = 0) -> int:
+        """Tenant-ticks of SLO-compliant service (post-warmup, non-grace) —
+        the chaos A/B's primary served-value metric: a parked tenant scores
+        zero for every tick it sits out, a browned-out one for every tick
+        the partial grant dips below SLO."""
+        return sum(1 for t in self.tenant_ticks
+                   if t.tick >= warmup_ticks and not t.in_grace and t.slo_ok)
 
     def summary(self) -> Dict[str, dict]:
         out: Dict[str, dict] = {}
@@ -129,18 +161,24 @@ def hop_penalties(dep: Deployment) -> Dict[Tuple[str, str], float]:
 def measure_tenant_tick(dep: Deployment, offered_gbps: float, dt_s: float,
                         backlog_pkts: float, max_sim_seqs: int = 96,
                         hop_pen: Optional[Dict[Tuple[str, str], float]] = None,
-                        served_pkts: Optional[float] = None
+                        served_pkts: Optional[float] = None,
+                        capacity_scale: float = 1.0
                         ) -> Tuple[float, float, float, float]:
     """One tick of the latency/throughput model.
 
     Returns (p50_s, p99_s, achieved_gbps, new_backlog_pkts). Achieved rate is
     capped by the deployment's placed capacity — and, when the governor's
     DWRR scheduler granted this tenant a service share (``served_pkts``), by
-    that grant. The backlog models demand the placement could not serve this
-    tick (drained when capacity exceeds offered load again); it is the
-    ingress queue depth the governor schedules against next tick.
+    that grant. ``capacity_scale`` degrades the placed capacity without the
+    allocator knowing (a gray failure: the runtime passes the pool's gray
+    factor over the NICs the placement spans) — achieved throughput drops,
+    backlog grows, and only that observable behavior can betray the sick
+    NIC. The backlog models demand the placement could not serve this tick
+    (drained when capacity exceeds offered load again); it is the ingress
+    queue depth the governor schedules against next tick.
     """
-    cap_pps = max(0.0, dep.achievable_gbps) * 1e9 / PKT_BITS
+    cap_pps = (max(0.0, dep.achievable_gbps) * 1e9 / PKT_BITS
+               * min(1.0, max(0.0, capacity_scale)))
     off_pps = max(0.0, offered_gbps) * 1e9 / PKT_BITS
     arriving = off_pps * dt_s + backlog_pkts
     served = min(arriving, cap_pps * dt_s)

@@ -62,6 +62,10 @@ class TenantRegistry:
         self.specs: Dict[str, TenantSpec] = {}
         self.admitted: Dict[str, Deployment] = {}
         self.rejected: Dict[str, str] = {}    # tenant -> reason
+        # Evicted-but-retrying tenants (chaos recovery): excluded from
+        # churn's pending() so re-admission happens only through the
+        # RecoveryManager's backoff schedule, never as a silent re-arrival.
+        self.parked: set = set()
 
     def register(self, spec: TenantSpec) -> None:
         if spec.name in self.specs:
@@ -108,10 +112,30 @@ class TenantRegistry:
             self.controller.governor.forget(name)
             del self.admitted[name]
 
+    def readmit(self, name: str) -> bool:
+        """Retry admission for a parked (previously evicted) tenant.
+
+        Eviction forgot the tenant's governor quota, so it is re-registered
+        first; a failed retry cleans up after itself — the quota is forgotten
+        again and the rejection note ``admit`` wrote is cleared, so a later
+        retry is not mistaken for a permanent rejection. Returns True when
+        the tenant is back in service."""
+        spec = self.specs[name]
+        self.controller.governor.register(name, spec.effective_quota())
+        try:
+            self.admit(name, strict=True)
+        except AdmissionError:
+            self.rejected.pop(name, None)
+            self.controller.governor.forget(name)
+            return False
+        self.parked.discard(name)
+        return True
+
     def pending(self, tick: int) -> List[str]:
         """Registered, not yet admitted/rejected, due to arrive by `tick`."""
         due = [n for n, s in self.specs.items()
                if n not in self.admitted and n not in self.rejected
+               and n not in self.parked
                and s.arrive_tick <= tick
                and (s.depart_tick is None or s.depart_tick > tick)]
         return sorted(due, key=lambda n: (-self.specs[n].sla.priority,

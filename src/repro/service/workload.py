@@ -180,9 +180,21 @@ def adversarial_churn(contracts: Dict[str, float],
     return ScenarioWorkload(specs, seed=seed)
 
 
+def chaos(contracts: Dict[str, float], seed: int = 0) -> ScenarioWorkload:
+    """Moderate staggered load for the fault-injection A/B: square waves at
+    ~3/4 of contract with real troughs. The stressor here is the fault plan,
+    not the traffic — the load leaves enough headroom that recovery (backoff
+    re-admission, brownout partial grants) has capacity to re-place into
+    when NICs revive, while peaks are high enough that a gray NIC's silent
+    degradation shows up as sustained achieved-vs-expected deviation."""
+    return _staggered({t: 0.75 * c for t, c in contracts.items()}, seed,
+                      pattern="bursty", duty=0.5, period_ticks=16,
+                      trough_frac=0.3, stagger=3)
+
+
 SCENARIOS = {"steady": steady, "bursty": bursty, "diurnal": diurnal,
              "churn": churn, "flash_crowd": flash_crowd,
-             "adversarial_churn": adversarial_churn}
+             "adversarial_churn": adversarial_churn, "chaos": chaos}
 
 
 def make_scenario(name: str, contracts: Dict[str, float],

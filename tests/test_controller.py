@@ -128,3 +128,30 @@ def test_fcfs_multi_app():
     d2 = ctrl.submit(apps["FW"], 20.0, prof_fw)
     assert d1.allocation.satisfied() and d2.allocation.satisfied()
     assert len(ctrl.deployments) == 2
+
+
+def test_replication_dirty_flag_skips_unchanged_snapshots():
+    """Appendix-D replication is dirty-flag gated: with no state API write
+    since the last snapshot the full cross-NIC traverse is skipped (no
+    transport reads), and any write re-arms it."""
+    ctrl = make_ctrl()
+    app, prof = isg_profile()
+    app.declare_state("isg_sa_table", "full-access")
+    dep = ctrl.submit(app, target_gbps=5.0, profile=prof, backup_nic="bf1-0")
+    victim = dep.allocation.nics_for("aes")[0]
+    ctrl.state.ne_set("isg_sa_table", 1, local=victim)
+
+    ctrl.replicate_for_failover(app.name)
+    assert dep.state_snapshot == {"isg_sa_table": 1}
+    reads_after_first = ctrl.state.transport.reads
+
+    # Unchanged state: the second replication must be a no-op.
+    ctrl.replicate_for_failover(app.name)
+    assert ctrl.state.transport.reads == reads_after_first
+    assert dep.state_snapshot == {"isg_sa_table": 1}
+
+    # A write bumps the version and re-arms the traverse.
+    ctrl.state.ne_set("isg_sa_table", 2, local=victim)
+    ctrl.replicate_for_failover(app.name)
+    assert ctrl.state.transport.reads > reads_after_first
+    assert dep.state_snapshot == {"isg_sa_table": 2}

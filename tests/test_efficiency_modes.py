@@ -84,7 +84,14 @@ def test_bench_service_fast_writes_json(tmp_path, capsys):
     assert payload["qos"]["pass"] is True
     assert payload["qos"]["isolation"]["innocents_broken_off"]
     assert payload["adversarial_churn"]["pass"] is True
+    # ...and the chaos fault-injection A/B (ISSUE 6): recovery-on dominates.
+    assert payload["chaos"]["pass"] is True
+    on, off = payload["chaos"]["recovery_on"], payload["chaos"]["recovery_off"]
+    assert on["slo_ticks"] > off["slo_ticks"]
+    assert len(on["permanent_evictions"]) < len(off["permanent_evictions"])
+    assert on["still_parked"] == []
     rows = capsys.readouterr().out
     assert "service_eff_pooled" in rows
     assert "service_qos" in rows
     assert "service_adversarial_churn" in rows
+    assert "service_chaos" in rows

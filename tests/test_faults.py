@@ -1,0 +1,232 @@
+"""Chaos harness (ISSUE 6): fault plans, gray-failure detection, recovery
+with backoff re-admission, brownout grants, and the invariant sentinel."""
+import dataclasses
+
+import pytest
+
+from repro.core.controller import MeiliController
+from repro.core.faults import (CRASH, FLAP, GRAY, MID_MIGRATION, REVIVE,
+                               ChaosEngine, FaultEvent, FaultPlan,
+                               GrayFailureDetector, RecoveryConfig,
+                               sentinel_check)
+from repro.core.pool import paper_cluster
+from repro.core.qos import ResourceGovernor, TenantQuota
+from repro.service.runtime import RuntimeConfig, ServiceRuntime
+from repro.service.tenants import (TenantRegistry, contracts,
+                                   default_tenant_mix)
+from repro.service.workload import make_scenario
+
+FAST = RuntimeConfig(dataplane_every=0, max_sim_seqs=32)
+
+
+def make_runtime(scenario="bursty", mix=None, cfg=FAST, seed=0,
+                 recovery=None, pool=None):
+    mix = mix or default_tenant_mix()
+    ctrl = MeiliController(pool or paper_cluster())
+    registry = TenantRegistry(ctrl)
+    for spec in mix:
+        registry.register(spec)
+    wl = make_scenario(scenario, contracts(mix), seed=seed)
+    rt = ServiceRuntime(ctrl, registry, wl, cfg, recovery=recovery)
+    registry.admit_all()
+    return rt
+
+
+def busiest_nic(ctrl):
+    usage = {}
+    for dep in ctrl.deployments.values():
+        for n, row in dep.allocation.A.items():
+            usage[n] = usage.get(n, 0) + sum(row.values())
+    return max(usage, key=lambda n: (usage[n], n))
+
+
+# -- fail_at shim vs explicit plan --------------------------------------------
+
+def test_fail_at_shim_matches_explicit_crash_plan():
+    """The legacy single-shot hook must be byte-equivalent to a one-event
+    CRASH plan: same NIC failed, same survivors, same fault log."""
+    rt_shim = make_runtime(seed=3)
+    rt_shim.run(24, fail_at=(10, None))
+    rt_plan = make_runtime(seed=3)
+    rt_plan.run(24, chaos=ChaosEngine(FaultPlan(
+        [FaultEvent(tick=10, kind=CRASH)])))
+    shim_faults = [(f.tick, f.kind, f.nic) for f in rt_shim.telemetry.faults()]
+    plan_faults = [(f.tick, f.kind, f.nic) for f in rt_plan.telemetry.faults()]
+    assert shim_faults == plan_faults
+    assert sorted(rt_shim.alive_tenants()) == sorted(rt_plan.alive_tenants())
+    rt_shim.ctrl.check_ledger()
+    rt_plan.ctrl.check_ledger()
+
+
+# -- gray-failure detection ----------------------------------------------------
+
+def test_gray_failure_detected_and_drained():
+    """A silently degraded NIC (allocator still sees full capacity) must be
+    convicted from achieved-throughput deviation alone, drained, and
+    quarantined — with the ledger clean throughout."""
+    cfg = dataclasses.replace(FAST, gray_detect=True)
+    rt = make_runtime(scenario="steady", cfg=cfg, seed=1)
+    sick = busiest_nic(rt.ctrl)
+    rt.run(24, chaos=ChaosEngine(FaultPlan(
+        [FaultEvent(tick=4, kind=GRAY, nic=sick, fraction=0.25)])))
+    probations = [f.nic for f in rt.telemetry.faults("gray_probation")]
+    assert sick in probations
+    assert sick in {f.nic for f in rt.telemetry.faults("gray_quarantined")}
+    # Quarantined = dead to the allocator, nothing left placed on it.
+    assert not rt.ctrl.pool[sick].alive
+    assert all(sick not in dep.nics_used()
+               for dep in rt.ctrl.deployments.values())
+    rt.ctrl.check_ledger()
+
+
+def test_gray_detector_exoneration_and_localization():
+    """One degraded observer cannot convict a NIC a full-service observer
+    shares (min-across-observers); absent evidence holds a streak rather
+    than resetting it."""
+    det = GrayFailureDetector(threshold=0.3, min_ticks=2)
+    for _ in range(4):
+        det.observe({"sick": [0.6, 0.5], "shared": [0.6, 0.0]})
+    assert det.suspects() == ["sick"]
+    assert det.suspicion["shared"] < det.threshold
+    streak = det.streak["sick"]
+    det.observe({"other": [0.1]})         # no evidence for "sick" this tick
+    assert det.streak["sick"] == streak   # held, not reset
+    det.clear("sick")
+    assert det.suspects() == []
+
+
+# -- recovery: park -> backoff -> readmit -------------------------------------
+
+def test_parked_tenant_readmitted_after_revive():
+    """A tenant whose placement cannot be restored is parked, retried with
+    exponential backoff, and re-admitted once the crashed NIC revives."""
+    # One ISG tenant on a minimal pool: the contract needs BOTH crypto
+    # NICs, so losing one leaves the tenant unplaceable until the revive.
+    mix = [dataclasses.replace(default_tenant_mix()[2], backup_nic=None)]
+    pool = paper_cluster(n_bf2=1, n_bf1=1, n_pensando=2)
+    rt = make_runtime(mix=mix, pool=pool,
+                      recovery=RecoveryConfig(park=True, seed=0))
+    assert rt.registry.active() == ["t-isg"]
+    rt.run(40, chaos=ChaosEngine(FaultPlan([
+        FaultEvent(tick=4, kind=CRASH, nic="pensando-0"),
+        FaultEvent(tick=18, kind=REVIVE, nic="pensando-0"),
+    ])))
+    assert [f.tenant for f in rt.telemetry.faults("parked")] == ["t-isg"]
+    readmits = rt.telemetry.faults("readmitted")
+    assert [f.tenant for f in readmits] == ["t-isg"]
+    assert readmits[0].tick >= 18          # only possible after the revive
+    assert rt.recovery.parked == {}
+    assert rt.recovery.mean_time_to_recover() is not None
+    assert rt.registry.active() == ["t-isg"]
+    rt.ctrl.check_ledger()
+
+
+def test_recovery_disabled_evicts_permanently():
+    mix = [dataclasses.replace(default_tenant_mix()[2], backup_nic=None)]
+    pool = paper_cluster(n_bf2=1, n_bf1=1, n_pensando=2)
+    rt = make_runtime(mix=mix, pool=pool,
+                      recovery=RecoveryConfig(park=False, brownout=False))
+    rt.run(40, chaos=ChaosEngine(FaultPlan([
+        FaultEvent(tick=4, kind=CRASH, nic="pensando-0"),
+        FaultEvent(tick=18, kind=REVIVE, nic="pensando-0"),
+    ])))
+    assert rt.recovery.evicted == ["t-isg"]
+    assert rt.telemetry.faults("readmitted") == []
+    assert rt.registry.active() == []      # revive does not resurrect policy
+    rt.ctrl.check_ledger()
+
+
+# -- brownout ------------------------------------------------------------------
+
+def test_brownout_factor_monotone_in_weight():
+    gov = ResourceGovernor()
+    gov.register("light", TenantQuota(max_gbps=10.0, weight=1.0))
+    gov.register("heavy", TenantQuota(max_gbps=10.0, weight=3.0))
+    assert gov.brownout_factor("light") == 1.0    # no brownout set
+    gov.set_brownout(0.5)
+    light, heavy = gov.brownout_factor("light"), gov.brownout_factor("heavy")
+    assert 0.5 <= light < heavy <= 1.0
+    gov.set_brownout(None)
+    assert gov.brownout_factor("heavy") == 1.0
+
+
+def test_scale_verdict_clamps_under_brownout():
+    gov = ResourceGovernor()
+    gov.register("t", TenantQuota(max_gbps=10.0, weight=1.0))
+    # A heavier peer: brownout is weight-proportional, the heaviest tenant
+    # keeps its full grant while lighter ones shed toward the level.
+    gov.register("vip", TenantQuota(max_gbps=10.0, weight=4.0))
+    gov.set_brownout(0.5)
+    v = gov.scale_verdict("t", est_gbps=10.0, offered_gbps=10.0,
+                          contract_gbps=10.0, current_gbps=10.0,
+                          achievable_gbps=10.0)
+    assert v.brownout
+    assert v.target_gbps <= gov.brownout_factor("t") * 10.0 + 1e-9
+    gov.set_brownout(None)
+    v2 = gov.scale_verdict("t", est_gbps=10.0, offered_gbps=10.0,
+                           contract_gbps=10.0, current_gbps=10.0,
+                           achievable_gbps=10.0)
+    assert not v2.brownout
+    assert v2.target_gbps > v.target_gbps
+
+
+# -- invariant sentinel --------------------------------------------------------
+
+def test_sentinel_catches_flow_and_backlog_corruption():
+    rt = make_runtime()
+    rt.run(4)
+    sentinel_check(rt)                     # healthy: no complaint
+    dep = rt.registry.deployment("t-fw")
+    dep.to.flow_table[999] = 424242        # flow mapped to missing pipeline
+    with pytest.raises(AssertionError, match="missing pipeline"):
+        sentinel_check(rt)
+    del dep.to.flow_table[999]
+    rt._backlog["t-fw"] = -1.0
+    with pytest.raises(AssertionError, match="negative backlog"):
+        sentinel_check(rt)
+
+
+# -- mid-migration fault -------------------------------------------------------
+
+def test_mid_migration_fault_conserves_flows_and_ledger():
+    """A crash landed between make-before-break begin and finish (flows
+    buffered, ledger already swapped) must leave no orphan flow and no
+    ledger drift; the run itself sentinels after the event."""
+    rt = make_runtime(seed=2)
+    rt.run(24, chaos=ChaosEngine(FaultPlan(
+        [FaultEvent(tick=8, kind=MID_MIGRATION)])))
+    assert rt.telemetry.faults("mid_migration")   # fired (or honest no-op)
+    for name in rt.registry.active():
+        dep = rt.registry.deployment(name)
+        pids = {p.pid for p in dep.to.pipelines}
+        assert all(pid in pids for pid in dep.to.flow_table.values()), name
+    rt.ctrl.check_ledger()
+
+
+# -- failover no-op path -------------------------------------------------------
+
+def test_inject_failure_with_nothing_allocated_is_noop():
+    """No allocations anywhere: the failover path must record a no-op event
+    instead of raising (chaos plans may fire into an empty pool)."""
+    ctrl = MeiliController(paper_cluster())
+    registry = TenantRegistry(ctrl)
+    wl = make_scenario("steady", {})
+    rt = ServiceRuntime(ctrl, registry, wl, FAST)
+    failed, impacted = rt.inject_failure(None)
+    assert failed is None and impacted == []
+    assert rt.telemetry.faults("failover_skipped")
+    ctrl.check_ledger()
+
+
+# -- flap through the runtime --------------------------------------------------
+
+def test_flap_schedules_revive_and_heals():
+    rt = make_runtime(seed=4)
+    sick = busiest_nic(rt.ctrl)
+    rt.run(20, chaos=ChaosEngine(FaultPlan([
+        FaultEvent(tick=5, kind=FLAP, nic=sick, duration_ticks=3)])))
+    assert [f.nic for f in rt.telemetry.faults("flap")] == [sick]
+    revives = rt.telemetry.faults("revive")
+    assert revives and revives[0].tick == 8
+    assert rt.ctrl.pool[sick].alive
+    rt.ctrl.check_ledger()

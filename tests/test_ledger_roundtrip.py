@@ -146,3 +146,105 @@ def test_shrink_resyncs_allocator_view():
         assert dep.allocation.bw_after[nic] == \
             pytest.approx(ctrl.pool[nic].free_bw_gbps)
     ctrl.check_ledger()
+
+
+# -- chaos-layer round-trips (ISSUE 6) ----------------------------------------
+
+def _service_runtime(mix, pool, recovery=None, scenario="steady", seed=0):
+    from repro.core.faults import RecoveryConfig
+    from repro.service.runtime import RuntimeConfig, ServiceRuntime
+    from repro.service.tenants import TenantRegistry, contracts
+    from repro.service.workload import make_scenario
+
+    ctrl = MeiliController(pool)
+    registry = TenantRegistry(ctrl)
+    for spec in mix:
+        registry.register(spec)
+    wl = make_scenario(scenario, contracts(mix), seed=seed)
+    rt = ServiceRuntime(ctrl, registry, wl,
+                        RuntimeConfig(dataplane_every=0, max_sim_seqs=32),
+                        recovery=recovery)
+    registry.admit_all()
+    return rt
+
+
+def test_flapping_nic_roundtrip_leaves_pool_at_baseline():
+    """A flap (crash + scheduled revive) driven through the full service
+    runtime — failover, autoscaling, re-placement — must keep the ledger
+    exact every tick and return the pool to its empty baseline once every
+    tenant terminates."""
+    from repro.core.faults import FLAP, ChaosEngine, FaultEvent, FaultPlan
+    from repro.service.tenants import default_tenant_mix
+
+    pool = paper_cluster()
+    base = snapshot(pool)
+    rt = _service_runtime(default_tenant_mix(), pool, seed=5)
+    load = {}
+    for dep in rt.ctrl.deployments.values():
+        for n, row in dep.allocation.A.items():
+            load[n] = load.get(n, 0) + sum(row.values())
+    sick = max(load, key=lambda n: (load[n], n))
+    rt.run(20, chaos=ChaosEngine(FaultPlan(
+        [FaultEvent(tick=6, kind=FLAP, nic=sick, duration_ticks=4)])))
+    rt.ctrl.check_ledger()
+    assert rt.ctrl.pool[sick].alive
+    for name in list(rt.ctrl.deployments):
+        rt.ctrl.terminate(name)
+    rt.ctrl.check_ledger()
+    assert rt.ctrl.pool.usage_snapshot() == {}
+    for n, (free, bw) in base.items():
+        st = rt.ctrl.pool[n]
+        assert st.free == free, f"{n}: unit drift {st.free} != {free}"
+        assert st.free_bw_gbps == pytest.approx(bw, abs=1e-6)
+
+
+def test_over_capacity_failure_evicts_lowest_weight_first():
+    """Five equal-size CPU-only tenants with distinct weights on two NICs;
+    crashing the fuller NIC leaves surviving capacity for exactly one of its
+    three victims. The governor's failover order hands that capacity to the
+    heaviest contract, so the evicted set is exactly the lowest-weight
+    victims — and the pool still round-trips to baseline, dead NIC
+    included."""
+    from repro.core.faults import CRASH, ChaosEngine, FaultEvent, FaultPlan
+    from repro.core.faults import RecoveryConfig
+    from repro.service.tenants import TenantSLA, TenantSpec
+
+    pool = paper_cluster(n_bf2=2, n_bf1=0, n_pensando=0)
+    base = snapshot(pool)
+    mix = []
+    for i in range(5):
+        app = ALL_APPS(impl="ref")["FW"]
+        mix.append(TenantSpec(
+            name=f"t{i + 1}", app=app, profile=paper_profile("FW"),
+            sla=TenantSLA(target_gbps=2.0, p99_latency_s=600e-6,
+                          priority=i + 1)))
+    rt = _service_runtime(mix, pool,
+                          recovery=RecoveryConfig(park=False, brownout=False))
+    assert len(rt.registry.active()) == 5
+    hosted = {}
+    for name in rt.registry.active():
+        for n in rt.registry.deployment(name).nics_used():
+            hosted.setdefault(n, set()).add(name)
+    victim_nic = max(hosted, key=lambda n: (len(hosted[n]), n))
+    victims = hosted[victim_nic]
+    assert len(victims) >= 2, "packing premise: the fuller NIC is shared"
+    weight = {s.name: float(s.sla.priority) for s in mix}
+    rt.run(16, chaos=ChaosEngine(FaultPlan(
+        [FaultEvent(tick=4, kind=CRASH, nic=victim_nic)])))
+    evicted = set(rt.recovery.evicted)
+    survivors = victims - evicted
+    assert evicted and evicted < victims    # over capacity, but not for all
+    # Strict weight order: every evicted victim is lighter than every
+    # surviving one (heaviest-first re-placement over equal-size demands).
+    assert max(weight[t] for t in evicted) < \
+        min(weight[t] for t in survivors)
+    assert survivors <= set(rt.registry.active())
+    rt.ctrl.check_ledger()
+    for name in list(rt.ctrl.deployments):
+        rt.ctrl.terminate(name)
+    rt.ctrl.check_ledger()
+    assert rt.ctrl.pool.usage_snapshot() == {}
+    for n, (free, bw) in base.items():
+        st = rt.ctrl.pool[n]
+        assert st.free == free, f"{n}: unit drift {st.free} != {free}"
+        assert st.free_bw_gbps == pytest.approx(bw, abs=1e-6)
