@@ -1,13 +1,20 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-slow bench bench-dataplane bench-service bench-defrag bench-qos bench-chaos
+.PHONY: test test-slow bench bench-obs bench-dataplane bench-service bench-defrag bench-qos bench-chaos check-bench
 
 # Tier-1 suite. pytest.ini excludes `slow` tests by default (the small
 # dry-run compiles a full train step and can take minutes), so this can
 # never wedge the time budget; run them explicitly with `make test-slow`.
-test:
+# The benchmark regression gate rides along: it compares the headline
+# numbers recorded in BENCH_service.json against benchmarks/
+# bench_baseline.json (no-op when no benchmark output exists).
+test: check-bench
 	python -m pytest -q
+
+# Regression gate over recorded benchmark output (ISSUE 7).
+check-bench:
+	python -m benchmarks.check_bench
 
 test-slow:
 	python -m pytest -q -m slow
@@ -15,6 +22,11 @@ test-slow:
 # Full benchmark sweep (all paper figures + the data-plane grid + Meili-Serve).
 bench:
 	python -m benchmarks.run
+
+# Full sweep with observability artifacts: structured run log (rows.jsonl +
+# meta.json) written under ./obs_artifacts (ISSUE 7).
+bench-obs:
+	python -m benchmarks.run --emit-obs
 
 # Just the fused data-plane grid; writes BENCH_dataplane.json.
 bench-dataplane:
@@ -40,6 +52,7 @@ bench-qos:
 # Chaos fault-injection A/B (ISSUE 6): identical compound fault plan
 # (flap, gray failure, mid-migration crash, rack outage, repair wave) run
 # with recovery on vs off; merges the `chaos` record into
-# BENCH_service.json.
+# BENCH_service.json and (ISSUE 7) dumps the decision-audit trace +
+# metrics artifacts for both arms under ./obs_artifacts.
 bench-chaos:
-	python -m benchmarks.bench_service --scenario chaos
+	python -m benchmarks.bench_service --scenario chaos --emit-obs

@@ -34,6 +34,7 @@ import time
 
 from benchmarks.common import row
 from repro.core.controller import MeiliController
+from repro.obs.runlog import RunLogger
 from repro.core.faults import (FLAP, GRAY, MID_MIGRATION, RACK, REVIVE,
                                ChaosEngine, FaultEvent, FaultPlan,
                                RecoveryConfig)
@@ -71,7 +72,7 @@ BARS = {"pooled_vs_standalone": 2.0, "pooled_vs_microservice": 1.2}
 
 
 def run(emit=print, fast: bool = False, seed: int = 0,
-        scenario: str = "full") -> dict:
+        scenario: str = "full", obs_dir=None) -> dict:
     if scenario == "churn":
         res = {"defrag": run_defrag(emit=emit, fast=fast, seed=seed)}
         res["pass"] = res["defrag"]["pass"]
@@ -86,7 +87,8 @@ def run(emit=print, fast: bool = False, seed: int = 0,
         res["pass"] = res["adversarial_churn"]["pass"]
         return res
     if scenario == "chaos":
-        res = {"chaos": run_chaos(emit=emit, fast=fast, seed=seed)}
+        res = {"chaos": run_chaos(emit=emit, fast=fast, seed=seed,
+                                  obs_dir=obs_dir)}
         res["pass"] = res["chaos"]["pass"]
         return res
     cfg = RuntimeConfig() if not fast else RuntimeConfig(
@@ -112,7 +114,8 @@ def run(emit=print, fast: bool = False, seed: int = 0,
     res["qos"] = run_qos(emit=emit, fast=fast, seed=seed)
     res["adversarial_churn"] = run_adversarial(emit=emit, fast=fast,
                                                seed=seed)
-    res["chaos"] = run_chaos(emit=emit, fast=fast, seed=seed)
+    res["chaos"] = run_chaos(emit=emit, fast=fast, seed=seed,
+                             obs_dir=obs_dir)
     res["bars"] = BARS
     res["pass"] = check(res)
     return res
@@ -346,11 +349,14 @@ def _chaos_plan(ticks: int, flap_nic: str, gray_nic: str) -> FaultPlan:
     ])
 
 
-def _run_chaos_arm(recovery_on: bool, ticks: int, seed: int) -> dict:
+def _run_chaos_arm(recovery_on: bool, ticks: int, seed: int,
+                   obs_dir=None) -> dict:
     """One arm of the chaos A/B: same mix, same seeded traffic, same fault
     plan; only the recovery policy differs. ON = park + backoff re-admission
     + brownout partial grants + gray-failure detection; OFF = the legacy
-    eviction-or-nothing baseline with no detection."""
+    eviction-or-nothing baseline with no detection. With ``obs_dir`` set
+    the arm's observability context (decision-audit trace + metrics) is
+    dumped under ``<obs_dir>/chaos_{on,off}/`` as a run artifact."""
     cfg = RuntimeConfig(dataplane_every=0, max_sim_seqs=48,
                         gray_detect=recovery_on)
     mix = _chaos_mix()
@@ -378,11 +384,24 @@ def _run_chaos_arm(recovery_on: bool, ticks: int, seed: int) -> dict:
     rt.run(ticks, chaos=engine)
     ctrl.check_ledger()     # the sentinel also ran after every fault
     tele = rt.telemetry
+    artifacts = None
+    if obs_dir is not None:
+        rt.obs.snapshot_compile_caches(planes=rt._planes.values())
+        arm_dir = (pathlib.Path(obs_dir)
+                   / ("chaos_on" if recovery_on else "chaos_off"))
+        artifacts = rt.obs.dump(arm_dir)
     return {
         "recovery_on": recovery_on,
         "flap_nic": flap_nic,
         "gray_nic": gray_nic,
         "slo_ticks": tele.slo_tick_count(cfg.warmup_ticks),
+        # Measured p99 (obs histogram over the run's sample stream) beside
+        # the per-tick legacy estimator's max.
+        "p99_measured_s_max": max(
+            (t.p99_measured_s for t in tele.tenant_ticks), default=0.0),
+        "p99_legacy_s_max": max(
+            (t.p99_s for t in tele.tenant_ticks), default=0.0),
+        "obs_artifacts": artifacts,
         "permanent_evictions": sorted(set(rt.recovery.evicted)),
         "parked_events": len(tele.faults("parked")),
         "readmissions": len(rt.recovery.readmissions),
@@ -397,7 +416,8 @@ def _run_chaos_arm(recovery_on: bool, ticks: int, seed: int) -> dict:
     }
 
 
-def run_chaos(emit=print, fast: bool = False, seed: int = 0) -> dict:
+def run_chaos(emit=print, fast: bool = False, seed: int = 0,
+              obs_dir=None) -> dict:
     """Chaos fault-injection A/B (ISSUE 6 acceptance): under an identical
     compound fault plan, recovery-on must strictly dominate recovery-off —
     more tenant-ticks of SLO-compliant service, fewer permanent evictions
@@ -405,8 +425,8 @@ def run_chaos(emit=print, fast: bool = False, seed: int = 0) -> dict:
     time-to-recover with every parked tenant re-admitted by run end. The
     invariant sentinel validates the ledger after every injected fault."""
     ticks = CHAOS_FAST_TICKS if fast else CHAOS_TICKS
-    on = _run_chaos_arm(True, ticks, seed)
-    off = _run_chaos_arm(False, ticks, seed)
+    on = _run_chaos_arm(True, ticks, seed, obs_dir=obs_dir)
+    off = _run_chaos_arm(False, ticks, seed, obs_dir=obs_dir)
     rec = {
         # self-describing (mergeable into a JSON from another mode/seed).
         "fast": fast,
@@ -443,6 +463,9 @@ def run_chaos(emit=print, fast: bool = False, seed: int = 0) -> dict:
     emit(row("service_chaos_brownout", 0,
              f"{on['brownout_ticks']}ticks_gray="
              f"{','.join(on['gray_probations']) or 'none'}"))
+    emit(row("service_chaos_p99", 0,
+             f"measured{on['p99_measured_s_max'] * 1e3:.1f}ms_legacy"
+             f"{on['p99_legacy_s_max'] * 1e3:.1f}ms"))
     emit(row("service_chaos", 0, f"pass={rec['pass']}"))
     return rec
 
@@ -474,11 +497,21 @@ def main(argv=None) -> None:
                          "admission-pressure run (make bench-qos)")
     ap.add_argument("--out", default=None,
                     help="output JSON path (default: repo-root BENCH_service.json)")
+    ap.add_argument("--emit-obs", action="store_true",
+                    help="write observability artifacts (decision-audit "
+                         "trace + metrics + structured run log) under "
+                         "--obs-dir")
+    ap.add_argument("--obs-dir", default="obs_artifacts",
+                    help="artifact directory for --emit-obs "
+                         "(default: ./obs_artifacts)")
     args = ap.parse_args(argv)
 
-    print("name,us_per_call,derived")
-    res = run(emit=print, fast=args.fast, seed=args.seed,
-              scenario=args.scenario)
+    obs_dir = args.obs_dir if args.emit_obs else None
+    logger = RunLogger("bench_service", out_dir=obs_dir)
+    logger.note(fast=args.fast, seed=args.seed, scenario=args.scenario)
+    logger.emit("name,us_per_call,derived")
+    res = run(emit=logger.emit, fast=args.fast, seed=args.seed,
+              scenario=args.scenario, obs_dir=obs_dir)
     out = (pathlib.Path(args.out) if args.out else
            pathlib.Path(__file__).resolve().parent.parent / "BENCH_service.json")
     payload = {
@@ -507,7 +540,10 @@ def main(argv=None) -> None:
             except (ValueError, KeyError):
                 pass
     out.write_text(json.dumps(payload, indent=2) + "\n")
+    logger.close()
     print(f"# wrote {out}")
+    if obs_dir is not None:
+        print(f"# wrote obs artifacts under {obs_dir}")
     if not res["pass"]:
         raise SystemExit("service benchmark below acceptance bars")
 

@@ -1,0 +1,102 @@
+"""Benchmark regression gate (ISSUE 7 satellite): compare the headline
+numbers in ``BENCH_service.json`` against the recorded baseline.
+
+Checked, each within the tolerance declared in ``bench_baseline.json``:
+
+  * the two efficiency ratio bars (pooled vs standalone / vs microservice);
+  * the chaos A/B's SLO-tick counts (and that recovery-on still dominates).
+
+Fast-mode records are skipped per check: ``--fast``/partial runs use fewer
+ticks, so their numbers are not comparable to the recorded full-mode
+baseline — the gate only scores records whose run shape matches. When
+``BENCH_service.json`` does not exist at all the gate passes with a notice
+(a fresh clone has no benchmark output; the gate guards *recorded* results
+against regression, it does not force a bench run into ``make test``).
+
+Run:  PYTHONPATH=src python -m benchmarks.check_bench   (make check-bench)
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+BASELINE = pathlib.Path(__file__).resolve().parent / "bench_baseline.json"
+
+
+def _within(current: float, recorded: float, rel_tol: float) -> bool:
+    return abs(current - recorded) <= rel_tol * abs(recorded)
+
+
+def check(bench: dict, baseline: dict, emit=print) -> bool:
+    ok = True
+
+    # Efficiency ratio bars — only meaningful for full-mode comparisons.
+    ratios = bench.get("ratios")
+    if ratios is None:
+        emit("check-bench: no ratios record (partial-scenario JSON), skipped")
+    elif bench.get("fast"):
+        emit("check-bench: fast-mode ratios not comparable, skipped")
+    else:
+        tol = baseline.get("ratio_rel_tol", 0.10)
+        for name, recorded in baseline.get("ratios", {}).items():
+            cur = ratios.get(name)
+            if cur is None:
+                emit(f"check-bench: FAIL {name} missing from BENCH JSON")
+                ok = False
+                continue
+            good = _within(cur, recorded, tol)
+            emit(f"check-bench: {'ok  ' if good else 'FAIL'} {name} "
+                 f"{cur:.4f} vs recorded {recorded:.4f} (tol {tol:.0%})")
+            ok = ok and good
+
+    # Chaos A/B SLO-tick counts — the record is self-describing (carries its
+    # own fast flag), so a fast chaos record merged into a full JSON skips.
+    chaos = bench.get("chaos")
+    base_chaos = baseline.get("chaos_slo_ticks")
+    if chaos is None or base_chaos is None:
+        emit("check-bench: no chaos record, skipped")
+    elif chaos.get("fast"):
+        emit("check-bench: fast-mode chaos record not comparable, skipped")
+    else:
+        tol = baseline.get("chaos_rel_tol", 0.25)
+        for arm in ("on", "off"):
+            cur = chaos.get(f"recovery_{arm}", {}).get("slo_ticks")
+            recorded = base_chaos.get(arm)
+            if cur is None or recorded is None:
+                emit(f"check-bench: FAIL chaos slo_ticks[{arm}] missing")
+                ok = False
+                continue
+            good = _within(cur, recorded, tol)
+            emit(f"check-bench: {'ok  ' if good else 'FAIL'} chaos "
+                 f"slo_ticks[{arm}] {cur} vs recorded {recorded} "
+                 f"(tol {tol:.0%})")
+            ok = ok and good
+        on = chaos.get("recovery_on", {}).get("slo_ticks")
+        off = chaos.get("recovery_off", {}).get("slo_ticks")
+        if on is not None and off is not None:
+            good = on > off
+            emit(f"check-bench: {'ok  ' if good else 'FAIL'} chaos "
+                 f"dominance on({on}) > off({off})")
+            ok = ok and good
+    return ok
+
+
+def main(argv=None) -> None:
+    path = ROOT / "BENCH_service.json"
+    if len(argv or sys.argv[1:]) == 1:
+        path = pathlib.Path((argv or sys.argv[1:])[0])
+    if not path.exists():
+        print(f"check-bench: {path.name} not found, nothing to gate (ok)")
+        return
+    bench = json.loads(path.read_text())
+    baseline = json.loads(BASELINE.read_text())
+    if not check(bench, baseline):
+        raise SystemExit("check-bench: headline numbers regressed "
+                         "past tolerance")
+    print("check-bench: pass")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,11 @@ Prints ``name,us_per_call,derived`` CSV rows. Mapping:
 
 Run one module headlessly:   python -m benchmarks.bench_dataplane
 Run everything:              python -m benchmarks.run   (or: make bench)
+With artifacts:              python -m benchmarks.run --emit-obs
+                             (structured rows.jsonl + meta.json under
+                             --obs-dir; make bench-obs)
 """
+import argparse
 import sys
 import traceback
 
@@ -25,6 +29,7 @@ from benchmarks import (bench_adaptive, bench_bandwidth, bench_dataplane,
                         bench_efficiency, bench_kernels, bench_pipeline,
                         bench_redirection, bench_scalability, bench_service,
                         bench_state)
+from repro.obs.runlog import RunLogger
 
 ALL = [
     ("fig7_8", bench_pipeline),
@@ -40,16 +45,29 @@ ALL = [
 ]
 
 
-def main() -> None:
-    print("name,us_per_call,derived")
-    failures = 0
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--emit-obs", action="store_true",
+                    help="write the structured run log (rows.jsonl + "
+                         "meta.json) under --obs-dir")
+    ap.add_argument("--obs-dir", default="obs_artifacts",
+                    help="artifact directory for --emit-obs "
+                         "(default: ./obs_artifacts)")
+    args = ap.parse_args(argv)
+
+    logger = RunLogger("benchmarks.run",
+                       out_dir=args.obs_dir if args.emit_obs else None)
+    logger.emit("name,us_per_call,derived")
+    failures = []
     for name, mod in ALL:
         try:
-            mod.run(emit=print)
+            mod.run(emit=logger.emit)
         except Exception:                      # noqa: BLE001
-            failures += 1
+            failures.append(name)
             traceback.print_exc()
-            print(f"{name},0,ERROR")
+            logger.emit(f"{name},0,ERROR")
+    logger.note(failures=failures)
+    logger.close()
     if failures:
         sys.exit(1)
 

@@ -34,6 +34,7 @@ from repro.core.pool import Pool
 from repro.core.profiler import AppProfile
 from repro.core.qos import ResourceGovernor
 from repro.core.state_engine import StateService
+from repro.obs import Obs
 
 
 @dataclasses.dataclass
@@ -83,13 +84,21 @@ class ControllerAgent:
 
 class MeiliController:
     def __init__(self, pool: Pool, clock: Callable[[], float] = time.monotonic,
-                 governor: Optional[ResourceGovernor] = None):
+                 governor: Optional[ResourceGovernor] = None,
+                 obs: Optional[Obs] = None):
         self.pool = pool
+        # Shared observability context (ISSUE 7): one metrics registry +
+        # decision-audit trace for the whole pool. Controller operations
+        # land as timed spans, governor verdicts as decision events, and a
+        # service runtime layered on top reuses this same context so every
+        # layer writes one causally-ordered log.
+        self.obs = obs or Obs()
         # Every capacity/priority decision — admission clamp, scale grant,
         # migration do-no-harm, failover ordering — routes through one
         # governor (permissive defaults when no quotas are registered).
         self.governor = governor or ResourceGovernor()
         self.governor.bind(pool)
+        self.governor.attach_obs(self.obs)
         self.agents = {n: ControllerAgent(n, pool) for n in pool.nics}
         self.deployments: Dict[str, Deployment] = {}
         self.state = StateService(list(pool.nics))
@@ -139,34 +148,41 @@ class MeiliController:
     def submit(self, app: MeiliApp, target_gbps: float, profile: AppProfile,
                backup_nic: Optional[str] = None,
                tenant: Optional[str] = None) -> Deployment:
-        # Admission routes through the governor: a target above the tenant's
-        # declared quota is clamped before any demand/placement math runs.
-        target_gbps = self.governor.admission_target(tenant or app.name,
-                                                     target_gbps)
-        R, r_s, t_R = self.demand(profile, target_gbps)
-        need = app.resource_needs()
-        alloc = resource_alloc(profile.stages, r_s, profile.t_s, self.pool, need)
-        commit(self.pool, alloc, need)
-        achievable = self._achievable(profile, alloc, r_s)
-        num_pipes = max(1, max((alloc.units(s) for s in profile.stages),
-                               default=1))
-        cap = self._pipeline_capacity(profile, num_pipes)
-        to = TrafficOrchestrator(num_pipelines=num_pipes,
-                                 capacity_per_pipeline=cap)
-        for name, decl in app.state_decls.items():
-            self.state.declare(name, decl["pattern"])
-        placed = {s: alloc.units(s) for s in profile.stages}  # track placement,
-        dep = Deployment(app=app, target_gbps=target_gbps, profile=profile,
-                         R=R, r_s=placed, allocation=alloc,
-                         num_pipelines=num_pipes, to=to,
-                         achievable_gbps=achievable, backup_nic=backup_nic,
-                         tenant=tenant or app.name)
-        self.deployments[app.name] = dep
-        self._account(dep)
-        self._emit({"t": self.clock(), "event": "deploy", "app": app.name,
-                    "tenant": dep.tenant, "target": target_gbps,
-                    "achievable": achievable})
-        return dep
+        with self.obs.trace.span("submit", tenant=tenant or app.name,
+                                 app=app.name,
+                                 asked_gbps=target_gbps) as sp:
+            # Admission routes through the governor: a target above the
+            # tenant's declared quota is clamped before any demand/placement
+            # math runs.
+            target_gbps = self.governor.admission_target(tenant or app.name,
+                                                         target_gbps)
+            R, r_s, t_R = self.demand(profile, target_gbps)
+            need = app.resource_needs()
+            alloc = resource_alloc(profile.stages, r_s, profile.t_s,
+                                   self.pool, need)
+            commit(self.pool, alloc, need)
+            achievable = self._achievable(profile, alloc, r_s)
+            num_pipes = max(1, max((alloc.units(s) for s in profile.stages),
+                                   default=1))
+            cap = self._pipeline_capacity(profile, num_pipes)
+            to = TrafficOrchestrator(num_pipelines=num_pipes,
+                                     capacity_per_pipeline=cap)
+            for name, decl in app.state_decls.items():
+                self.state.declare(name, decl["pattern"])
+            placed = {s: alloc.units(s) for s in profile.stages}
+            dep = Deployment(app=app, target_gbps=target_gbps, profile=profile,
+                             R=R, r_s=placed, allocation=alloc,
+                             num_pipelines=num_pipes, to=to,
+                             achievable_gbps=achievable, backup_nic=backup_nic,
+                             tenant=tenant or app.name)
+            self.deployments[app.name] = dep
+            self._account(dep)
+            sp.note(granted_gbps=target_gbps, achievable_gbps=achievable,
+                    nics=sorted(dep.nics_used()))
+            self._emit({"t": self.clock(), "event": "deploy", "app": app.name,
+                        "tenant": dep.tenant, "target": target_gbps,
+                        "achievable": achievable})
+            return dep
 
     def terminate(self, app_name: str) -> None:
         dep = self.deployments.pop(app_name)
@@ -183,6 +199,15 @@ class MeiliController:
         migrated) to meet the new target."""
         t0 = self.clock()
         dep = self.deployments[app_name]
+        with self.obs.trace.span("scale", tenant=dep.tenant, app=app_name,
+                                 target_gbps=new_target_gbps) as sp:
+            dep = self._adaptive_scale(dep, app_name, new_target_gbps, t0)
+            sp.note(achievable_gbps=dep.achievable_gbps,
+                    num_pipelines=dep.num_pipelines)
+            return dep
+
+    def _adaptive_scale(self, dep: Deployment, app_name: str,
+                        new_target_gbps: float, t0: float) -> Deployment:
         need = dep.app.resource_needs()
         R, r_s_new, _ = self.demand(dep.profile, new_target_gbps)
         delta = {s: r_s_new[s] - dep.r_s.get(s, 0) for s in dep.profile.stages}
@@ -314,40 +339,56 @@ class MeiliController:
         victims = [name for name, dep in self.deployments.items()
                    if any(u > 0
                           for u in dep.allocation.A.get(nic, {}).values())]
-        for name in self.governor.failover_order(victims):
-            dep = self.deployments[name]
-            lost = {s: u for s, u in dep.allocation.A.get(nic, {}).items()
-                    if u > 0}
-            t0 = self.clock()
-            impacted.append(name)
-            need = dep.app.resource_needs()
-            # Return the lost ledger entries to the dead NIC...
-            st = self.pool[nic]
-            for s, u in lost.items():
-                st.give(need[s], u)
-            st.give_bw(dep.allocation.bw_charge.pop(nic, 0.0))
-            dep.allocation.A[nic] = {}
-            dep.allocation.bw_after[nic] = st.free_bw_gbps
-            # ...and re-place the units lost on it, quota-clamped.
-            held = sum(dep.allocation.units(s) for s in dep.profile.stages)
-            capped = self.governor.replacement_demand(
-                dep.tenant or name, lost, held_units=held)
-            lost_demand = {s: capped.get(s, 0) for s in dep.profile.stages}
-            replacement = resource_alloc(dep.profile.stages, lost_demand,
-                                         dep.profile.t_s, self.pool, need)
-            commit(self.pool, replacement, need)
-            dep.allocation.merge(replacement)
-            unmet = {s: u for s, u in replacement.unmet.items() if u > 0}
-            dep.r_s = {s: dep.allocation.units(s) for s in dep.profile.stages}
-            dep.achievable_gbps = self._achievable(dep.profile, dep.allocation,
-                                                   dep.r_s)
-            if dep.state_snapshot:
-                for k, v in dep.state_snapshot.items():
-                    self.state.fstate_set(k, v)
-            self._account(dep)
-            self._emit({"t": self.clock(), "event": "failover",
-                        "app": name, "tenant": dep.tenant, "nic": nic,
-                        "unmet": unmet, "response_s": self.clock() - t0})
+        order = self.governor.failover_order(victims)
+        with self.obs.trace.span("failover", nic=nic,
+                                 victims=list(order)) as fsp:
+            for name in order:
+                dep = self.deployments[name]
+                lost = {s: u for s, u in dep.allocation.A.get(nic, {}).items()
+                        if u > 0}
+                t0 = self.clock()
+                impacted.append(name)
+                with self.obs.trace.span("replace", tenant=dep.tenant,
+                                         nic=nic, app=name,
+                                         lost=dict(lost)) as rsp:
+                    need = dep.app.resource_needs()
+                    # Return the lost ledger entries to the dead NIC...
+                    st = self.pool[nic]
+                    for s, u in lost.items():
+                        st.give(need[s], u)
+                    st.give_bw(dep.allocation.bw_charge.pop(nic, 0.0))
+                    dep.allocation.A[nic] = {}
+                    dep.allocation.bw_after[nic] = st.free_bw_gbps
+                    # ...and re-place the units lost on it, quota-clamped.
+                    held = sum(dep.allocation.units(s)
+                               for s in dep.profile.stages)
+                    capped = self.governor.replacement_demand(
+                        dep.tenant or name, lost, held_units=held)
+                    lost_demand = {s: capped.get(s, 0)
+                                   for s in dep.profile.stages}
+                    replacement = resource_alloc(dep.profile.stages,
+                                                 lost_demand,
+                                                 dep.profile.t_s, self.pool,
+                                                 need)
+                    commit(self.pool, replacement, need)
+                    dep.allocation.merge(replacement)
+                    unmet = {s: u for s, u in replacement.unmet.items()
+                             if u > 0}
+                    dep.r_s = {s: dep.allocation.units(s)
+                               for s in dep.profile.stages}
+                    dep.achievable_gbps = self._achievable(
+                        dep.profile, dep.allocation, dep.r_s)
+                    if dep.state_snapshot:
+                        for k, v in dep.state_snapshot.items():
+                            self.state.fstate_set(k, v)
+                    self._account(dep)
+                    rsp.note(unmet=dict(unmet),
+                             achievable_gbps=dep.achievable_gbps)
+                    self._emit({"t": self.clock(), "event": "failover",
+                                "app": name, "tenant": dep.tenant, "nic": nic,
+                                "unmet": unmet,
+                                "response_s": self.clock() - t0})
+            fsp.note(impacted=list(impacted))
         return impacted
 
     # -- online re-placement / defragmentation (make-before-break) ----------------
@@ -370,6 +411,23 @@ class MeiliController:
         """
         t0 = self.clock()
         dep = self.deployments[app_name]
+        with self.obs.trace.span("migrate", tenant=dep.tenant, app=app_name,
+                                 forced=forced) as sp:
+            ev = self._migrate(dep, app_name, only_nics, require_improvement,
+                               forced, t0)
+            if ev is None:
+                sp.note(outcome="rejected")
+            else:
+                sp.note(outcome="committed",
+                        nics_before=ev["nics_before"],
+                        nics_after=ev["nics_after"],
+                        hop_pairs_before=ev["hop_pairs_before"],
+                        hop_pairs_after=ev["hop_pairs_after"])
+            return ev
+
+    def _migrate(self, dep: Deployment, app_name: str,
+                 only_nics: Optional[List[str]], require_improvement: bool,
+                 forced: bool, t0: float) -> Optional[dict]:
         need = dep.app.resource_needs()
         demand = {s: dep.allocation.units(s) for s in dep.profile.stages}
         if only_nics is None:

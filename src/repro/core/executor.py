@@ -39,14 +39,16 @@ elementwise per the Table 2 paradigm ops.
 """
 from __future__ import annotations
 
+import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import (MeiliApp, PacketBatch, apply_stage, cache_put,
-                              chain_key, chain_runner, stage_runner)
+from repro.core.graph import (MeiliApp, PacketBatch, _cache_stats,
+                              apply_stage, cache_put, chain_key,
+                              chain_runner, stage_runner)
 from repro.core.orchestrator import SubBatch, TrafficOrchestrator
 from repro.core.ringbuffer import Ring, make_rings, pop_many, push_many
 from repro.core import replication as repl
@@ -83,8 +85,16 @@ _DISPATCH_PROGRAMS: Dict[Any, Callable] = {}
 
 
 def _dispatch_program(app: MeiliApp) -> Callable:
+    # NOTE: the "dispatch" hit/miss counters are NOT bumped here — this
+    # lookup happens once per plane at construction. They are counted per
+    # *call* in ParallelDataPlane.process(), where a miss means jax.jit
+    # actually traced+compiled a fresh shape specialization (the event the
+    # zero-steady-state-recompile invariant is about).
     key = chain_key(app)
+    stats = _cache_stats("dispatch")
     prog = _DISPATCH_PROGRAMS.get(key)
+    if prog is not None:
+        return prog
     if prog is None:
         stages = tuple(app.stages)
 
@@ -107,7 +117,8 @@ def _dispatch_program(app: MeiliApp) -> Callable:
         # one, so XLA may update the (lanes x cap x pkt) allocation in place
         # instead of copying it every batch.
         prog = cache_put(_DISPATCH_PROGRAMS, key,
-                         jax.jit(dispatch, donate_argnums=(0,)))
+                         jax.jit(dispatch, donate_argnums=(0,)),
+                         stats=stats)
     return prog
 
 
@@ -118,7 +129,8 @@ class ParallelDataPlane:
                  R: Optional[Dict[str, int]] = None,
                  latencies: Optional[Dict[str, float]] = None,
                  capacity_per_pipeline: float = 256.0,
-                 ring_capacity: int = 4096):
+                 ring_capacity: int = 4096,
+                 metrics=None, profile: bool = False):
         if num_pipelines is None:
             if R is None:
                 assert latencies is not None, "need num_pipelines, R or latencies"
@@ -142,6 +154,12 @@ class ParallelDataPlane:
         self._shape_keys: set = set()
         self.dispatch_stats: Dict[str, Any] = {
             "calls": 0, "compiles": 0, "by_tenant": {}}
+        # Observability hooks (ISSUE 7): an optional MetricsRegistry sink for
+        # call/compile counters, and a profile flag that times every fused
+        # dispatch to completion (block_until_ready) into a histogram —
+        # OFF by default because blocking serializes the device queue.
+        self.metrics = metrics
+        self.profile = profile
 
     def _tag_tenant(self, tenant: Optional[str], packets: int) -> None:
         if tenant is None:
@@ -225,6 +243,7 @@ class ParallelDataPlane:
         self._ensure_rings(batch, M)
         self.dispatch_stats["calls"] += 1
         before = self._jit_cache_size()
+        t0 = time.perf_counter() if self.profile else 0.0
 
         try:
             self._rings, out = self._dispatch(
@@ -239,14 +258,63 @@ class ParallelDataPlane:
 
         after = self._jit_cache_size()
         if after is not None:
-            self.dispatch_stats["compiles"] += after - before
+            grew = after - before
+            self.dispatch_stats["compiles"] += grew
+            compiled = grew > 0
         else:                                 # proxy: predicted shape keys
             skey = (B_pad, P_pad, M, N, self._ring_cap, self._ring_proto_key)
-            if skey not in self._shape_keys:
+            compiled = skey not in self._shape_keys
+            if compiled:
                 self._shape_keys.add(skey)
                 self.dispatch_stats["compiles"] += 1
+        # Process-wide compile-cache counters (ISSUE 7): one fused dispatch
+        # call == one cache event. miss == jax.jit compiled a fresh shape
+        # specialization; hit == warm reuse. Tests assert miss stays 0 after
+        # warmup (zero steady-state recompiles, now an observable).
+        dstats = _cache_stats("dispatch")
+        dstats["miss" if compiled else "hit"] += 1
+        if self.profile:
+            jax.block_until_ready(out)
+            us = (time.perf_counter() - t0) * 1e6
+            if self.metrics is not None:
+                self.metrics.histogram("dataplane_dispatch_us",
+                                       app=self.app.name).observe(us)
+        if self.metrics is not None:
+            self.metrics.counter("dataplane_dispatch_calls_total",
+                                 app=self.app.name).inc()
+            if self.dispatch_stats["compiles"] > 0:
+                self.metrics.gauge("dataplane_dispatch_compiles",
+                                   app=self.app.name).set(
+                                       self.dispatch_stats["compiles"])
         if P_pad != P:
             out = jax.tree.map(lambda a: a[:P], out)
+        return out
+
+    # -- per-stage device profiling (ISSUE 7) ----------------------------------
+    def profile_stages(self, batch: PacketBatch,
+                       iters: int = 1) -> Dict[str, float]:
+        """Time each stage's jitted program to completion on ``batch`` and
+        return mean µs per stage. Runs OUTSIDE the fused dispatch (stage
+        programs are the same process-wide cached jits the unfused path
+        uses), so a profile never perturbs steady-state compile counters of
+        the fused program. Timings land in the attached registry as
+        ``dataplane_stage_us{app=...,stage=...}`` histograms."""
+        out: Dict[str, float] = {}
+        cur = batch
+        for fn in self.app.stages:
+            run = stage_runner(fn)
+            jax.block_until_ready(run(cur))          # warm: exclude compile
+            t0 = time.perf_counter()
+            for _ in range(max(1, iters)):
+                nxt = run(cur)
+                jax.block_until_ready(nxt)
+            us = (time.perf_counter() - t0) * 1e6 / max(1, iters)
+            out[fn.name] = us
+            if self.metrics is not None:
+                self.metrics.histogram("dataplane_stage_us",
+                                       app=self.app.name,
+                                       stage=fn.name).observe(us)
+            cur = nxt
         return out
 
     # -- unfused reference path (kept as the dispatch-layer oracle) ------------

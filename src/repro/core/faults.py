@@ -100,20 +100,42 @@ class GrayFailureDetector:
         self.suspicion: Dict[str, float] = {}
         self.streak: Dict[str, int] = {}
         self.probation: Set[str] = set()
+        # Observability (ISSUE 7): when a DecisionTrace is attached, every
+        # suspicion increment and exoneration lands in the audit log, and
+        # the most recent observer set per NIC is kept so a quarantine
+        # verdict can name who testified.
+        self.trace = None
+        self.observers: Dict[str, List[str]] = {}
 
-    def observe(self, blame: Dict[str, List[float]]) -> None:
+    def observe(self, blame: Dict[str, List[float]],
+                observers: Optional[Dict[str, List[str]]] = None) -> None:
         """``blame``: nic -> deviations from each loaded tenant using it this
         tick. NICs absent from ``blame`` hold their streak (no evidence
-        either way); NICs with any zero-deviation observer reset it."""
+        either way); NICs with any zero-deviation observer reset it.
+        ``observers`` (optional) names the tenants behind each NIC's
+        deviations, recorded for the audit trail."""
         for nic, devs in blame.items():
             if not devs:
                 continue
+            if observers is not None and nic in observers:
+                self.observers[nic] = list(observers[nic])
             dev = min(devs)
             s = self.suspicion.get(nic, 0.0)
             self.suspicion[nic] = (1.0 - self.alpha) * s + self.alpha * dev
             if dev > self.threshold:
                 self.streak[nic] = self.streak.get(nic, 0) + 1
+                if self.trace is not None:
+                    self.trace.event(
+                        "gray_suspicion", nic=nic, kind="fault",
+                        deviation=dev, suspicion=self.suspicion[nic],
+                        streak=self.streak[nic],
+                        observers=self.observers.get(nic, []))
             else:
+                if self.streak.get(nic, 0) > 0 and self.trace is not None:
+                    self.trace.event(
+                        "gray_exonerated", nic=nic, kind="fault",
+                        deviation=dev, suspicion=self.suspicion[nic],
+                        observers=self.observers.get(nic, []))
                 self.streak[nic] = 0
 
     def suspects(self) -> List[str]:
@@ -128,6 +150,7 @@ class GrayFailureDetector:
         self.suspicion.pop(nic, None)
         self.streak.pop(nic, None)
         self.probation.discard(nic)
+        self.observers.pop(nic, None)
 
 
 # ---------------------------------------------------------------------------

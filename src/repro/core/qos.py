@@ -93,6 +93,10 @@ class ScaleVerdict:
     ``burst_credit_spent``  Gbps-ticks drawn from the token bucket.
     ``brownout``     the grant was clamped by an active brownout (degraded
                      partial service while parked tenants wait for capacity).
+    ``reason``       audit label naming the clamps that shaped the grant
+                     ("granted" when nothing clamped; otherwise a comma-
+                     joined subset of quota_clamp/burst/brownout/
+                     headroom_clamp/unit_quota/pressure).
     """
 
     target_gbps: float
@@ -101,6 +105,7 @@ class ScaleVerdict:
     granted_frac: float = 1.0
     burst_credit_spent: float = 0.0
     brownout: bool = False
+    reason: str = "granted"
 
 
 class ResourceGovernor:
@@ -122,6 +127,10 @@ class ResourceGovernor:
     def __init__(self, enabled: bool = True, pressure_frac: float = 0.92):
         self.enabled = enabled
         self.pressure_frac = pressure_frac
+        # Observability context (ISSUE 7): when attached, every verdict this
+        # governor issues lands in the decision-audit trace with its reason
+        # and the ledger state that produced it. None = silent (no-op).
+        self.obs = None
         self.quotas: Dict[str, TenantQuota] = {}
         self.credits: Dict[str, float] = {}      # burst tokens (Gbps-ticks)
         self._pool: Optional[Pool] = None
@@ -140,6 +149,15 @@ class ResourceGovernor:
     def bind(self, pool: Pool) -> None:
         """Attach the pool whose quota-ledger rows this governor maintains."""
         self._pool = pool
+
+    def attach_obs(self, obs) -> None:
+        """Attach the observability context verdicts are audited into."""
+        self.obs = obs
+
+    def _audit(self, name: str, tenant: Optional[str] = None,
+               **detail) -> None:
+        if self.obs is not None:
+            self.obs.trace.event(name, tenant=tenant, **detail)
 
     def register(self, tenant: str, quota: Optional[TenantQuota] = None) -> None:
         q = quota or TenantQuota()
@@ -168,9 +186,14 @@ class ResourceGovernor:
 
     # -- per-tick bookkeeping --------------------------------------------------
     def begin_tick(self, pool: Optional[Pool] = None,
-                   active: Iterable[str] = ()) -> None:
+                   active: Iterable[str] = (),
+                   tick: Optional[int] = None) -> None:
         """Refill burst credits and snapshot the free-unit headroom ledger
-        that this tick's scale grants will draw against."""
+        that this tick's scale grants will draw against. ``tick`` (when the
+        caller knows it) stamps the observability trace so verdicts issued
+        this tick land at the right place in the audit log."""
+        if tick is not None and self.obs is not None:
+            self.obs.set_tick(tick)
         for t in active:
             q = self.quota(t)
             if q.burst_gbps > 0.0:
@@ -214,6 +237,10 @@ class ResourceGovernor:
         q = self.quota(tenant)
         if not self.enabled or q.max_gbps is None:
             return target_gbps
+        if target_gbps > q.max_gbps:
+            self._audit("admission_clamp", tenant=tenant,
+                        asked_gbps=target_gbps, granted_gbps=q.max_gbps,
+                        reason="target above quota")
         return min(target_gbps, q.max_gbps)
 
     def admission_verdict(self, tenant: str, allocation) -> AdmissionVerdict:
@@ -221,7 +248,11 @@ class ResourceGovernor:
         whose contracted target could not be fully placed is rejected."""
         if not allocation.satisfied():
             unmet = {s: u for s, u in allocation.unmet.items() if u > 0}
+            self._audit("admission_verdict", tenant=tenant, admitted=False,
+                        reason=f"unplaceable at contract: {unmet}")
             return AdmissionVerdict(False, f"unplaceable at contract: {unmet}")
+        self._audit("admission_verdict", tenant=tenant, admitted=True,
+                    reason="placed at contract")
         return AdmissionVerdict(True)
 
     # -- scaling ---------------------------------------------------------------
@@ -254,6 +285,7 @@ class ResourceGovernor:
         ``stage_kinds`` is one entry PER STAGE (repeats meaningful): an app
         with two crypto stages needs two crypto units per pipeline of growth.
         """
+        reasons: List[str] = []
         desired = max(floor_frac * contract_gbps, est_gbps * headroom)
         # Capacity pressure: load (incl. queued) is eating into the *placed*
         # capacity — re-target above it before the backlog compounds.
@@ -261,8 +293,13 @@ class ResourceGovernor:
                                                            1e-9)
         if pressure:
             desired = max(desired, offered_gbps * headroom)
+            reasons.append("pressure")
         cap, burn = self._quota_cap_gbps(tenant, desired)
         granted = min(desired, cap)
+        if granted < desired - _EPS:
+            reasons.append("quota_clamp")
+        if burn > 0.0:
+            reasons.append("burst")
 
         # Brownout clamp: while tenants are parked post-failure, survivors
         # are granted only a weight-proportional fraction of contract (never
@@ -274,6 +311,7 @@ class ResourceGovernor:
             bcap = max(floor_frac * contract_gbps, bfac * contract_gbps)
             if granted > bcap + _EPS:
                 granted, browned, burn = bcap, True, 0.0
+                reasons.append("brownout")
 
         # Partial grant under contention: growth beyond the pool's free-unit
         # headroom (or the tenant's max_units quota) is not granted — the
@@ -294,10 +332,15 @@ class ResourceGovernor:
                 for kind, m in mult.items():
                     pipes_ok = min(pipes_ok,
                                    max(0, self._headroom.get(kind, 0)) // m)
+            if pipes_ok < pipes_want:
+                reasons.append("headroom_clamp")
+            pipes_ledger = pipes_ok
             q = self.quota(tenant)
             if self.enabled and q.max_units is not None:
                 room = max(0, q.max_units - held_units)
                 pipes_ok = min(pipes_ok, room // max(1, len(stage_kinds)))
+            if pipes_ok < pipes_ledger:
+                reasons.append("unit_quota")
             if pipes_ok < pipes_want:
                 granted = current_gbps + pipes_ok * unit_gbps
             if granted > current_gbps + _EPS:
@@ -332,9 +375,21 @@ class ResourceGovernor:
                 burn = used
         else:
             burn = 0.0
+        reason = ",".join(reasons) if reasons else "granted"
+        self._audit("scale_verdict", tenant=tenant, reason=reason,
+                    desired_gbps=desired, granted_gbps=granted,
+                    current_gbps=current_gbps, rescale=rescale,
+                    pressure=pressure, granted_frac=frac, brownout=browned,
+                    burst_credit_spent=burn,
+                    burst_credit_left=self.credits.get(tenant, 0.0),
+                    headroom=dict(self._headroom) if self._headroom else {})
+        if self.obs is not None:
+            self.obs.metrics.counter("governor_scale_verdicts_total",
+                                     tenant=tenant, reason=reason).inc()
         return ScaleVerdict(target_gbps=granted, rescale=rescale,
                             pressure=pressure, granted_frac=frac,
-                            burst_credit_spent=burn, brownout=browned)
+                            burst_credit_spent=burn, brownout=browned,
+                            reason=reason)
 
     # -- defrag / migration ----------------------------------------------------
     def migration_verdict(self, *, hops_before: int, hops_after: int,
@@ -348,7 +403,16 @@ class ResourceGovernor:
         harmless = (hops_after <= hops_before
                     and achievable_after >= achievable_before - 1e-9)
         improves = (nics_after < nics_before or hops_after < hops_before)
-        return harmless and (improves or not require_improvement)
+        allowed = harmless and (improves or not require_improvement)
+        self._audit("migration_verdict", allowed=allowed,
+                    reason=("allowed" if allowed
+                            else ("harmful" if not harmless
+                                  else "no improvement")),
+                    hops_before=hops_before, hops_after=hops_after,
+                    achievable_before=achievable_before,
+                    achievable_after=achievable_after,
+                    nics_before=nics_before, nics_after=nics_after)
+        return allowed
 
     def defrag_order(self, scored: Iterable) -> List:
         """Order defrag candidates: worst fragmentation first; at equal

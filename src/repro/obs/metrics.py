@@ -1,0 +1,230 @@
+"""Metrics registry: counters, gauges, histograms with streaming quantiles.
+
+One ``MetricsRegistry`` per observability context (``obs.Obs``). Metrics are
+keyed by (name, sorted label items), so ``registry.counter("x", tenant="a")``
+and ``tenant="b"`` are independent series of one family — the Prometheus
+label model, without the client library.
+
+Histograms carry BOTH percentile estimators from ``obs.percentiles``: the
+seeded reservoir (exact until capacity, then uniform-sample estimates — the
+headline "measured" number) and a set of P² markers (O(1) cross-check
+series). ``quantile()`` returns the reservoir value.
+
+Exposition: ``render_prometheus()`` emits the text format (counters/gauges
+as-is; histograms as Prometheus summaries — ``{quantile="0.99"}`` rows plus
+``_count``/``_sum``); ``to_records()``/``dump_jsonl()`` emit one JSON object
+per series for artifact files.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+from repro.obs.percentiles import P2Quantile, Reservoir
+
+LabelKey = Tuple[Tuple[str, str], ...]
+
+DEFAULT_QUANTILES = (0.5, 0.9, 0.99)
+
+
+def _label_key(labels: Dict[str, str]) -> LabelKey:
+    return tuple(sorted((k, str(v)) for k, v in labels.items()))
+
+
+def _label_str(key: LabelKey) -> str:
+    if not key:
+        return ""
+    inner = ",".join(f'{k}="{v}"' for k, v in key)
+    return "{" + inner + "}"
+
+
+class Counter:
+    kind = "counter"
+
+    def __init__(self, name: str, labels: LabelKey):
+        self.name = name
+        self.labels = labels
+        self.value = 0.0
+
+    def inc(self, v: float = 1.0) -> None:
+        assert v >= 0.0, "counters only go up"
+        self.value += v
+
+
+class Gauge:
+    kind = "gauge"
+
+    def __init__(self, name: str, labels: LabelKey):
+        self.name = name
+        self.labels = labels
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def inc(self, v: float = 1.0) -> None:
+        self.value += v
+
+
+class Histogram:
+    kind = "histogram"
+
+    def __init__(self, name: str, labels: LabelKey,
+                 quantiles: Sequence[float] = DEFAULT_QUANTILES,
+                 reservoir_capacity: int = 4096, seed: int = 0,
+                 p2: bool = False):
+        self.name = name
+        self.labels = labels
+        self.count = 0
+        self.sum = 0.0
+        self.min: Optional[float] = None
+        self.max: Optional[float] = None
+        self.quantiles = tuple(quantiles)
+        self.reservoir = Reservoir(reservoir_capacity, seed=seed)
+        # The P² cross-check estimators are opt-in: they are O(1) memory but
+        # per-sample Python updates, and the reservoir path is already exact
+        # until capacity — always-on hot series (the runtime's per-tenant
+        # latency stream) stay vectorized, diagnostic series can ask for the
+        # second opinion.
+        self._p2 = {q: P2Quantile(q) for q in self.quantiles} if p2 else {}
+
+    def observe(self, x: float) -> None:
+        x = float(x)
+        self.count += 1
+        self.sum += x
+        self.min = x if self.min is None else min(self.min, x)
+        self.max = x if self.max is None else max(self.max, x)
+        self.reservoir.observe(x)
+        for est in self._p2.values():
+            est.observe(x)
+
+    def observe_many(self, xs: Iterable[float]) -> None:
+        import numpy as np
+        arr = np.asarray(list(xs) if not hasattr(xs, "ravel") else xs,
+                         dtype=float).ravel()
+        if arr.size == 0:
+            return
+        self.count += int(arr.size)
+        self.sum += float(arr.sum())
+        lo, hi = float(arr.min()), float(arr.max())
+        self.min = lo if self.min is None else min(self.min, lo)
+        self.max = hi if self.max is None else max(self.max, hi)
+        self.reservoir.observe_many(arr)
+        for est in self._p2.values():
+            for x in arr.tolist():
+                est.observe(x)
+
+    def quantile(self, q: float) -> Optional[float]:
+        """The measured quantile (reservoir path: exact until capacity)."""
+        return self.reservoir.quantile(q)
+
+    def p2_quantile(self, q: float) -> Optional[float]:
+        """The O(1) P² cross-check estimate (tracked quantiles only)."""
+        est = self._p2.get(q)
+        return est.value() if est is not None else None
+
+    @property
+    def mean(self) -> Optional[float]:
+        return self.sum / self.count if self.count else None
+
+
+Metric = Union[Counter, Gauge, Histogram]
+
+
+class MetricsRegistry:
+    """Get-or-create registry of labeled metric series."""
+
+    def __init__(self, seed: int = 0, reservoir_capacity: int = 4096):
+        self.seed = seed
+        self.reservoir_capacity = reservoir_capacity
+        self._metrics: Dict[Tuple[str, LabelKey], Metric] = {}
+
+    def _get(self, cls, name: str, labels: Dict[str, str], **kw) -> Metric:
+        key = (name, _label_key(labels))
+        m = self._metrics.get(key)
+        if m is None:
+            m = cls(name, key[1], **kw)
+            self._metrics[key] = m
+        assert isinstance(m, cls), (
+            f"metric {name} already registered as {m.kind}")
+        return m
+
+    def counter(self, name: str, **labels: str) -> Counter:
+        return self._get(Counter, name, labels)
+
+    def gauge(self, name: str, **labels: str) -> Gauge:
+        return self._get(Gauge, name, labels)
+
+    def histogram(self, name: str,
+                  quantiles: Sequence[float] = DEFAULT_QUANTILES,
+                  p2: bool = False, **labels: str) -> Histogram:
+        # Per-series seed derived from the registry seed + identity so two
+        # registries built alike retain identical reservoirs.
+        key = (name, _label_key(labels))
+        m = self._metrics.get(key)
+        if m is None:
+            m = Histogram(name, key[1], quantiles=quantiles,
+                          reservoir_capacity=self.reservoir_capacity,
+                          seed=hash((self.seed,) + key) & 0x7FFFFFFF,
+                          p2=p2)
+            self._metrics[key] = m
+        assert isinstance(m, Histogram)
+        return m
+
+    def get(self, name: str, **labels: str) -> Optional[Metric]:
+        return self._metrics.get((name, _label_key(labels)))
+
+    def series(self, name: str) -> List[Metric]:
+        return [m for (n, _), m in sorted(self._metrics.items())
+                if n == name]
+
+    # -- exposition ------------------------------------------------------------
+    def render_prometheus(self) -> str:
+        lines: List[str] = []
+        seen_type: set = set()
+        for (name, labels), m in sorted(self._metrics.items()):
+            if isinstance(m, Histogram):
+                if name not in seen_type:
+                    lines.append(f"# TYPE {name} summary")
+                    seen_type.add(name)
+                base = dict(labels)
+                for q in m.quantiles:
+                    v = m.quantile(q)
+                    if v is None:
+                        continue
+                    lk = _label_key({**base, "quantile": repr(q)})
+                    lines.append(f"{name}{_label_str(lk)} {v:.9g}")
+                lines.append(f"{name}_count{_label_str(labels)} {m.count}")
+                lines.append(f"{name}_sum{_label_str(labels)} {m.sum:.9g}")
+            else:
+                if name not in seen_type:
+                    lines.append(f"# TYPE {name} {m.kind}")
+                    seen_type.add(name)
+                lines.append(f"{name}{_label_str(labels)} {m.value:.9g}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
+    def to_records(self) -> List[dict]:
+        out: List[dict] = []
+        for (name, labels), m in sorted(self._metrics.items()):
+            rec = {"name": name, "labels": dict(labels), "kind": m.kind}
+            if isinstance(m, Histogram):
+                rec.update(count=m.count, sum=m.sum, min=m.min, max=m.max,
+                           mean=m.mean,
+                           quantiles={repr(q): m.quantile(q)
+                                      for q in m.quantiles},
+                           exact=m.reservoir.exact)
+                if m._p2:              # cross-check only when tracked
+                    rec["p2"] = {repr(q): m.p2_quantile(q)
+                                 for q in m.quantiles}
+            else:
+                rec["value"] = m.value
+            out.append(rec)
+        return out
+
+    def dump_jsonl(self, path) -> None:
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        with path.open("w") as f:
+            for rec in self.to_records():
+                f.write(json.dumps(rec) + "\n")

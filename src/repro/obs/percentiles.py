@@ -1,0 +1,230 @@
+"""Streaming percentile estimators for the metrics registry (ISSUE 7).
+
+Two complementary estimators back every latency histogram:
+
+  ``P2Quantile``  the Jain & Chlamtac P-squared estimator: five markers,
+      O(1) memory, O(1) per observation. Exact until the 5th sample, then a
+      piecewise-parabolic approximation whose error is bounded by the local
+      sample density around the target quantile — in practice well under 1%
+      of the distribution's span for the unimodal latency shapes the sim
+      model produces. This is the *cheap cross-check* estimate.
+
+  ``Reservoir``   seeded uniform reservoir sampling (Vitter's Algorithm R).
+      Percentiles are EXACT while the stream fits the capacity; beyond it
+      they are unbiased estimates over a uniform sample of size
+      ``capacity``, with standard-order-statistic error
+      O(sqrt(q(1-q)/capacity)) — at the default 4096 that is ~0.16%
+      around the median and ~0.05% at p99 in rank space. This is the
+      *measured-distribution* path the acceptance bar quotes.
+
+The registry reports the reservoir quantile as the headline number; the P²
+value can ride along as a cross-check series (a large disagreement flags a
+multimodal distribution the reservoir undersampled).
+
+Determinism: the reservoir takes an explicit seed so two arms of an A/B
+fed identical streams retain identical samples.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+class P2Quantile:
+    """Jain & Chlamtac (1985) P² single-quantile streaming estimator."""
+
+    def __init__(self, q: float):
+        assert 0.0 < q < 1.0
+        self.q = q
+        self._heights: List[float] = []          # marker heights (sorted)
+        self._pos: List[float] = []              # actual marker positions
+        self._want: List[float] = []             # desired marker positions
+        self._inc: List[float] = []              # desired-position increments
+        self.count = 0
+
+    def observe(self, x: float) -> None:
+        x = float(x)
+        self.count += 1
+        h = self._heights
+        if len(h) < 5:
+            h.append(x)
+            h.sort()
+            if len(h) == 5:
+                q = self.q
+                self._pos = [1.0, 2.0, 3.0, 4.0, 5.0]
+                self._want = [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q,
+                              3.0 + 2.0 * q, 5.0]
+                self._inc = [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0]
+            return
+        # Find the cell k the observation falls into; clamp the extremes.
+        if x < h[0]:
+            h[0] = x
+            k = 0
+        elif x >= h[4]:
+            h[4] = x
+            k = 3
+        else:
+            k = 0
+            while k < 3 and not (h[k] <= x < h[k + 1]):
+                k += 1
+        for i in range(k + 1, 5):
+            self._pos[i] += 1.0
+        for i in range(5):
+            self._want[i] += self._inc[i]
+        # Adjust interior markers with the piecewise-parabolic (P²) update.
+        for i in (1, 2, 3):
+            d = self._want[i] - self._pos[i]
+            if ((d >= 1.0 and self._pos[i + 1] - self._pos[i] > 1.0)
+                    or (d <= -1.0 and self._pos[i - 1] - self._pos[i] < -1.0)):
+                s = 1.0 if d >= 1.0 else -1.0
+                hp = self._parabolic(i, s)
+                if not (h[i - 1] < hp < h[i + 1]):
+                    hp = self._linear(i, s)
+                h[i] = hp
+                self._pos[i] += s
+
+    def _parabolic(self, i: int, s: float) -> float:
+        h, n = self._heights, self._pos
+        return h[i] + s / (n[i + 1] - n[i - 1]) * (
+            (n[i] - n[i - 1] + s) * (h[i + 1] - h[i]) / (n[i + 1] - n[i])
+            + (n[i + 1] - n[i] - s) * (h[i] - h[i - 1]) / (n[i] - n[i - 1]))
+
+    def _linear(self, i: int, s: float) -> float:
+        h, n = self._heights, self._pos
+        j = i + int(s)
+        return h[i] + s * (h[j] - h[i]) / (n[j] - n[i])
+
+    def value(self) -> Optional[float]:
+        """The current estimate (exact below 5 samples; None when empty)."""
+        if not self._heights:
+            return None
+        if self.count < 5:
+            arr = np.asarray(sorted(self._heights))
+            return float(np.percentile(arr, 100.0 * self.q))
+        return self._heights[2]
+
+
+def _merge_sorted(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Merge two sorted arrays in O(n+k) — ``np.insert`` semantics without
+    its generic-indexing overhead."""
+    out = np.empty(a.size + b.size, dtype=float)
+    pos = a.searchsorted(b) + np.arange(b.size)
+    mask = np.ones(out.size, dtype=bool)
+    mask[pos] = False
+    out[pos] = b
+    out[mask] = a
+    return out
+
+
+class Reservoir:
+    """Seeded uniform reservoir (Algorithm R) with a sorted core and a small
+    pending buffer.
+
+    The retained sample set lives in a SORTED numpy array, so a quantile is
+    an index + linear interpolation (bit-identical to ``np.quantile``'s
+    default method). Ingested chunks are not merged immediately: they sit
+    in a pending list and are folded into the core every ``capacity // 8``
+    samples, so the O(capacity) merge cost is amortized across ticks. A
+    quantile asked while samples are pending is still EXACT — the target
+    ranks of core ∪ pending can only fall in a (pending+2)-wide window of
+    the core, so sorting pending plus that window answers the query without
+    paying for the merge. This is what keeps the always-on measured-
+    percentile path inside the benchmark's wall-clock budget: the service
+    runtime feeds every tenant's per-tick latency samples through here and
+    reads p99 back out each tick.
+
+    Eviction past capacity uses the reservoir-merge formulation: for each
+    flushed chunk, the number of chunk elements entering the sample is
+    drawn hypergeometrically (the exact law of a uniform capacity-subset of
+    old-stream ∪ chunk), chunk entrants are chosen uniformly, and as many
+    uniformly-random retained samples are dropped. Chunk-size-independent,
+    fully vectorized, and preserves the uniform-sample guarantee.
+    """
+
+    def __init__(self, capacity: int = 4096, seed: int = 0):
+        assert capacity > 0
+        self.capacity = capacity
+        self._rng = np.random.default_rng(seed)
+        self._arr = np.empty(0, dtype=float)   # sorted retained core
+        self._pend: List[np.ndarray] = []      # unflushed chunks (stream order)
+        self._pend_n = 0
+        self._flush_at = max(1, capacity // 8)
+        self.count = 0                 # stream length seen
+
+    @property
+    def exact(self) -> bool:
+        """True while quantiles are exact (no sample has been evicted)."""
+        return self.count <= self.capacity
+
+    def observe(self, x: float) -> None:
+        self.observe_many(np.asarray([x], dtype=float))
+
+    def observe_many(self, xs: Sequence[float]) -> None:
+        xs = np.asarray(xs, dtype=float).ravel()
+        if xs.size == 0:
+            return
+        self.count += int(xs.size)
+        self._pend.append(xs)
+        self._pend_n += int(xs.size)
+        # Past capacity the pending window would bias quantiles (pending is
+        # the exact recent stream, the core a uniform sample of everything)
+        # so sampling happens eagerly there; below capacity flushing is pure
+        # amortization and waits for a full batch.
+        if self._pend_n >= self._flush_at or not self.exact:
+            self._flush()
+
+    def _flush(self) -> None:
+        if not self._pend_n:
+            return
+        xs = (np.concatenate(self._pend) if len(self._pend) > 1
+              else self._pend[0])
+        self._pend = []
+        self._pend_n = 0
+        room = self.capacity - self._arr.size
+        if room > 0:
+            k = min(room, int(xs.size))
+            # Fill phase takes the first k STREAM elements (Algorithm R's
+            # deterministic prefix), not the k smallest.
+            self._arr = _merge_sorted(self._arr, np.sort(xs[:k]))
+            xs = xs[k:]
+        if not xs.size:
+            return
+        n_old = self.count - int(xs.size)
+        m = int(self._rng.hypergeometric(xs.size, n_old, self.capacity))
+        if m == 0:
+            return
+        keep = np.sort(self._rng.choice(xs, size=m, replace=False))
+        victims = self._rng.choice(self.capacity, size=m, replace=False)
+        self._arr = _merge_sorted(np.delete(self._arr, victims), keep)
+
+    def _interp(self, s: np.ndarray, pos: float) -> float:
+        lo = int(pos)
+        hi = min(lo + 1, s.size - 1)
+        return float(s[lo] + (pos - lo) * (s[hi] - s[lo]))
+
+    def quantile(self, q: float) -> Optional[float]:
+        if self.count == 0:
+            return None
+        if not self._pend_n:
+            return self._interp(self._arr, q * (self._arr.size - 1))
+        # Exact quantile over core ∪ pending without merging: the elements
+        # at union ranks [r_lo, r_hi] lie in core[r_lo - |pend| : r_hi + 1]
+        # or in pending, so sorting that window suffices.
+        pend = (np.sort(np.concatenate(self._pend)) if len(self._pend) > 1
+                else np.sort(self._pend[0]))
+        core = self._arr
+        n = core.size + pend.size
+        pos = q * (n - 1)
+        r_lo = int(pos)
+        r_hi = min(r_lo + 1, n - 1)
+        lo = max(0, r_lo - pend.size)
+        window = np.sort(np.concatenate(
+            [core[lo:min(core.size, r_hi + 1)], pend]))
+        v_lo = window[r_lo - lo]
+        v_hi = window[r_hi - lo]
+        return float(v_lo + (pos - r_lo) * (v_hi - v_lo))
+
+    def samples(self) -> np.ndarray:
+        self._flush()
+        return self._arr.copy()

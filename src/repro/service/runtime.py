@@ -41,6 +41,7 @@ from repro.core.executor import ParallelDataPlane
 from repro.core.faults import (CRASH, ChaosEngine, FaultEvent, FaultPlan,
                                GrayFailureDetector, RecoveryConfig,
                                RecoveryManager)
+from repro.obs import Obs
 from repro.service.tenants import AdmissionError, TenantRegistry
 from repro.service.telemetry import (ClusterTick, TelemetryLog, TenantTick,
                                      hop_penalties, measure_tenant_tick)
@@ -88,12 +89,20 @@ class ServiceRuntime:
     def __init__(self, controller: MeiliController, registry: TenantRegistry,
                  workload: ScenarioWorkload,
                  cfg: Optional[RuntimeConfig] = None,
-                 recovery: Optional[RecoveryConfig] = None):
+                 recovery: Optional[RecoveryConfig] = None,
+                 obs: Optional[Obs] = None):
         self.ctrl = controller
         self.registry = registry
         self.workload = workload
         self.cfg = cfg or RuntimeConfig()
-        self.telemetry = TelemetryLog()
+        # One observability context for the whole stack: reuse the
+        # controller's (which the governor already audits into) unless the
+        # caller supplies one. The telemetry log mirrors fault records into
+        # the same trace, so chaos events, recovery transitions, governor
+        # verdicts, and controller spans share one causal order.
+        self.obs = obs or controller.obs
+        self.telemetry = TelemetryLog(trace=self.obs.trace,
+                                      warmup_ticks=self.cfg.warmup_ticks)
         self.tick_now = 0
         self._planes: Dict[str, ParallelDataPlane] = {}
         # Dispatch attribution carried across plane rebuilds (scale/failover
@@ -115,6 +124,8 @@ class ServiceRuntime:
         self.gray = (GrayFailureDetector(threshold=self.cfg.gray_threshold,
                                          min_ticks=self.cfg.gray_min_ticks)
                      if self.cfg.gray_detect else None)
+        if self.gray is not None:
+            self.gray.trace = self.obs.trace
         controller.add_hook(self._on_event)
 
     # -- controller feedback ---------------------------------------------------
@@ -162,7 +173,8 @@ class ServiceRuntime:
             dep = self.registry.deployment(tenant)
             cap = self.ctrl._pipeline_capacity(dep.profile, dep.num_pipelines)
             dp = ParallelDataPlane(dep.app, num_pipelines=dep.num_pipelines,
-                                   capacity_per_pipeline=cap)
+                                   capacity_per_pipeline=cap,
+                                   metrics=self.obs.metrics)
             self._planes[tenant] = dp
         return dp
 
@@ -263,27 +275,42 @@ class ServiceRuntime:
             return
         for nic in [max(suspects,
                         key=lambda n: (self.gray.suspicion.get(n, 0.0), n))]:
-            for other in suspects:
-                if other != nic:
-                    self.gray.clear(other)
+            co_accused = [n for n in suspects if n != nic]
+            for other in co_accused:
+                self.gray.clear(other)
             self.gray.probation.add(nic)
+            # The quarantine verdict, with everything an operator needs to
+            # audit it: why this NIC, on whose testimony, who was acquitted.
+            self.obs.trace.event(
+                "quarantine_verdict", nic=nic,
+                reason=(f"suspicion {self.gray.suspicion.get(nic, 0.0):.3f} "
+                        f"> {self.gray.threshold:g} for "
+                        f">= {self.gray.min_ticks} evidence ticks"),
+                suspicion=self.gray.suspicion.get(nic, 0.0),
+                streak=self.gray.streak.get(nic, 0),
+                observers=self.gray.observers.get(nic, []),
+                co_accused=co_accused)
             self.telemetry.record_fault(tick, "gray_probation", nic=nic)
-            healthy = [n for n in self.ctrl.pool.names()
-                       if n != nic and n not in self.gray.probation]
-            victims = [name for name, dep in self.ctrl.deployments.items()
-                       if nic in dep.nics_used()]
-            for name in victims:
-                self.ctrl.migrate(name, only_nics=healthy, forced=True,
-                                  require_improvement=False)
-            still = [name for name, dep in self.ctrl.deployments.items()
-                     if nic in dep.nics_used()]
-            if still:
-                self.inject_failure(nic)
-                self.telemetry.record_fault(tick, "gray_quarantined", nic=nic,
-                                            detail="escalated to failover")
-            else:
-                self.ctrl.pool.mark_failed(nic)
-                self.telemetry.record_fault(tick, "gray_quarantined", nic=nic)
+            with self.obs.trace.span("gray_drain", nic=nic) as sp:
+                healthy = [n for n in self.ctrl.pool.names()
+                           if n != nic and n not in self.gray.probation]
+                victims = [name for name, dep in self.ctrl.deployments.items()
+                           if nic in dep.nics_used()]
+                for name in victims:
+                    self.ctrl.migrate(name, only_nics=healthy, forced=True,
+                                      require_improvement=False)
+                still = [name for name, dep in self.ctrl.deployments.items()
+                         if nic in dep.nics_used()]
+                if still:
+                    self.inject_failure(nic)
+                    self.telemetry.record_fault(tick, "gray_quarantined",
+                                                nic=nic,
+                                                detail="escalated to failover")
+                else:
+                    self.ctrl.pool.mark_failed(nic)
+                    self.telemetry.record_fault(tick, "gray_quarantined",
+                                                nic=nic)
+                sp.note(victims=victims, escalated=bool(still))
             self.recovery.sweep(tick)
 
     # -- churn -----------------------------------------------------------------
@@ -313,6 +340,7 @@ class ServiceRuntime:
             chaos.bind(self)
         for _ in range(num_ticks):
             tick = self.tick_now
+            self.obs.set_tick(tick)
             self._churn(tick)
             if chaos is not None:
                 chaos.step(tick)
@@ -331,7 +359,7 @@ class ServiceRuntime:
             gov = self.ctrl.governor
             active = [t for t in self.registry.active()
                       if t in self.workload.specs]
-            gov.begin_tick(self.ctrl.pool, active)
+            gov.begin_tick(self.ctrl.pool, active, tick=tick)
 
             # Pass 1 — demand estimation + governor-granted scaling, in
             # priority order: under contention the headroom ledger is drawn
@@ -369,6 +397,7 @@ class ServiceRuntime:
             cluster_nics: set = set()
             cluster_hops = 0
             blame: Dict[str, List[float]] = {}   # nic -> observed deviations
+            witnesses: Dict[str, List[str]] = {}  # nic -> testifying tenants
             for tenant in order:
                 spec = self.registry.specs[tenant]
                 offered = offered_now[tenant]
@@ -383,14 +412,25 @@ class ServiceRuntime:
                             self._plane(tenant).process(batch, tenant=tenant))
 
                 hop_pen = hop_penalties(dep)   # once per tenant per tick
-                p50, p99, achieved, backlog = measure_tenant_tick(
+                p50, p99, achieved, backlog, samples = measure_tenant_tick(
                     dep, offered, cfg.dt_s,
                     self._backlog.get(tenant, 0.0), cfg.max_sim_seqs,
                     hop_pen=hop_pen,
                     served_pkts=served_bytes[tenant] / PKT_BYTES_F,
-                    capacity_scale=gray_scale.get(tenant, 1.0))
+                    capacity_scale=gray_scale.get(tenant, 1.0),
+                    return_samples=True)
                 self._backlog[tenant] = backlog
                 cluster_achieved += achieved
+                # Measured percentiles (ISSUE 7): the raw per-sequence
+                # latency samples stream into a per-tenant histogram; the
+                # p99 reported beside the legacy estimator is an exact (or
+                # P²-approximate past reservoir capacity) percentile of the
+                # run's whole sample distribution so far.
+                hist = self.obs.metrics.histogram("tenant_latency_s",
+                                                  tenant=tenant)
+                if samples.size:
+                    hist.observe_many(samples)
+                p99_measured = hist.quantile(0.99) if hist.count else 0.0
 
                 expect = min(offered, spec.sla.target_gbps)
                 slo_ok = (achieved >= (1.0 - cfg.slo_tol) * expect
@@ -411,6 +451,7 @@ class ServiceRuntime:
                         dev = max(0.0, 1.0 - achieved / want)
                         for n in tenant_nics:
                             blame.setdefault(n, []).append(dev)
+                            witnesses.setdefault(n, []).append(tenant)
                 cluster_nics.update(tenant_nics)
                 cluster_hops += tenant_hops
                 self.telemetry.record(TenantTick(
@@ -421,7 +462,7 @@ class ServiceRuntime:
                     event=self._events.pop(tenant, ""),
                     hop_pairs=tenant_hops, nics_used=len(tenant_nics),
                     granted_gbps=self._granted.get(tenant, dep.target_gbps),
-                    backlog_pkts=backlog))
+                    backlog_pkts=backlog, p99_measured_s=p99_measured))
 
                 if (spec.backup_nic is not None
                         and cfg.replicate_every
@@ -435,7 +476,7 @@ class ServiceRuntime:
                           for r in ("cpu", "regex", "crypto", "compression")},
                 nics_used=len(cluster_nics), hop_pairs=cluster_hops))
             if self.gray is not None and blame:
-                self.gray.observe(blame)
+                self.gray.observe(blame, observers=witnesses)
                 self._drain_suspects(tick)
             self._events.clear()
             self.tick_now += 1

@@ -29,7 +29,7 @@ class TenantTick:
     offered_gbps: float
     achieved_gbps: float
     p50_s: float
-    p99_s: float
+    p99_s: float                 # legacy estimator: sim percentile + backlog formula
     units: int                   # resource units attributed to the tenant
     slo_ok: bool
     in_grace: bool = False       # post-failover/migration grace (no SLO acct)
@@ -38,6 +38,8 @@ class TenantTick:
     nics_used: int = 0           # NICs this tenant's placement spans
     granted_gbps: float = 0.0    # governor-granted provision target (QoS)
     backlog_pkts: float = 0.0    # ingress queue depth carried out of the tick
+    p99_measured_s: float = 0.0  # measured p99 over the run's sample stream
+                                 # (obs histogram; 0 until samples exist)
 
 
 @dataclasses.dataclass
@@ -64,10 +66,35 @@ class FaultRecord:
 
 
 class TelemetryLog:
-    def __init__(self):
+    """Run log of tenant/cluster/fault records.
+
+    ``warmup_ticks`` set at construction is the shared default horizon for
+    every accessor that excludes warmup (``slo_report``/``slo_tick_count``/
+    ``summary``) — callers may still override per call, but the log itself
+    now knows the run's warmup so the accessors agree by default. When a
+    ``DecisionTrace`` is attached, every fault record is mirrored into it
+    as a ``kind="fault"`` event, so chaos injections and recovery
+    transitions land in the same causally-ordered audit log as governor
+    verdicts and controller spans.
+    """
+
+    def __init__(self, trace=None, warmup_ticks: int = 0):
         self.tenant_ticks: List[TenantTick] = []
         self.cluster_ticks: List[ClusterTick] = []
         self.fault_events: List[FaultRecord] = []
+        self.trace = trace
+        self.warmup_ticks = warmup_ticks
+        # One-pass per-tenant grouping, built incrementally: accessors used
+        # to rescan all ticks per tenant per call (O(tenants x ticks) every
+        # report); the index appends only what arrived since the last call.
+        self._groups: Dict[str, List[TenantTick]] = {}
+        self._grouped_upto = 0
+
+    def _grouped(self) -> Dict[str, List[TenantTick]]:
+        for t in self.tenant_ticks[self._grouped_upto:]:
+            self._groups.setdefault(t.tenant, []).append(t)
+        self._grouped_upto = len(self.tenant_ticks)
+        return self._groups
 
     def record(self, t: TenantTick) -> None:
         self.tenant_ticks.append(t)
@@ -79,6 +106,9 @@ class TelemetryLog:
                      tenant: Optional[str] = None, detail: str = "") -> None:
         self.fault_events.append(FaultRecord(tick=tick, kind=kind, nic=nic,
                                              tenant=tenant, detail=detail))
+        if self.trace is not None:
+            self.trace.event(kind, tenant=tenant, nic=nic, kind="fault",
+                             tick=tick, detail=detail)
 
     def faults(self, kind: Optional[str] = None) -> List[FaultRecord]:
         if kind is None:
@@ -86,43 +116,58 @@ class TelemetryLog:
         return [f for f in self.fault_events if f.kind == kind]
 
     def series(self, tenant: str) -> List[TenantTick]:
-        return [t for t in self.tenant_ticks if t.tenant == tenant]
+        return list(self._grouped().get(tenant, ()))
+
+    def _warmup(self, warmup_ticks: Optional[int]) -> int:
+        return self.warmup_ticks if warmup_ticks is None else warmup_ticks
 
     # -- SLO accounting -------------------------------------------------------
-    def slo_report(self, warmup_ticks: int = 0,
+    def slo_report(self, warmup_ticks: Optional[int] = None,
                    max_violation_frac: float = 0.05) -> Dict[str, dict]:
         """Per-tenant SLO compliance over the run; ticks inside a post-failover
         grace window or the warmup are not counted against the tenant."""
+        warmup = self._warmup(warmup_ticks)
         out: Dict[str, dict] = {}
-        for t in self.tenant_ticks:
-            if t.tick < warmup_ticks or t.in_grace:
-                continue
-            r = out.setdefault(t.tenant, {"ticks": 0, "violations": 0})
-            r["ticks"] += 1
-            r["violations"] += 0 if t.slo_ok else 1
+        for tenant, s in self._grouped().items():
+            r = {"ticks": 0, "violations": 0}
+            for t in s:
+                if t.tick < warmup or t.in_grace:
+                    continue
+                r["ticks"] += 1
+                r["violations"] += 0 if t.slo_ok else 1
+            if r["ticks"]:
+                out[tenant] = r
         for tenant, r in out.items():
             r["violation_frac"] = (r["violations"] / r["ticks"]
                                    if r["ticks"] else 0.0)
             r["pass"] = r["violation_frac"] <= max_violation_frac
         return out
 
-    def slo_tick_count(self, warmup_ticks: int = 0) -> int:
+    def slo_tick_count(self, warmup_ticks: Optional[int] = None) -> int:
         """Tenant-ticks of SLO-compliant service (post-warmup, non-grace) —
         the chaos A/B's primary served-value metric: a parked tenant scores
         zero for every tick it sits out, a browned-out one for every tick
         the partial grant dips below SLO."""
+        warmup = self._warmup(warmup_ticks)
         return sum(1 for t in self.tenant_ticks
-                   if t.tick >= warmup_ticks and not t.in_grace and t.slo_ok)
+                   if t.tick >= warmup and not t.in_grace and t.slo_ok)
 
-    def summary(self) -> Dict[str, dict]:
+    def summary(self, warmup_ticks: Optional[int] = None) -> Dict[str, dict]:
+        """Per-tenant run statistics over post-warmup ticks (the same
+        horizon ``slo_report`` uses, so the two reports describe the same
+        window by default)."""
+        warmup = self._warmup(warmup_ticks)
         out: Dict[str, dict] = {}
-        for tenant in sorted({t.tenant for t in self.tenant_ticks}):
-            s = self.series(tenant)
+        for tenant in sorted(self._grouped()):
+            s = [t for t in self._grouped()[tenant] if t.tick >= warmup]
+            if not s:
+                continue
             out[tenant] = {
                 "ticks": len(s),
                 "offered_gbps_mean": float(np.mean([t.offered_gbps for t in s])),
                 "achieved_gbps_mean": float(np.mean([t.achieved_gbps for t in s])),
                 "p99_s_max": float(max(t.p99_s for t in s)),
+                "p99_measured_s_max": float(max(t.p99_measured_s for t in s)),
                 "units_mean": float(np.mean([t.units for t in s])),
                 "hop_pairs_mean": float(np.mean([t.hop_pairs for t in s])),
                 "nics_used_mean": float(np.mean([t.nics_used for t in s])),
@@ -162,8 +207,8 @@ def measure_tenant_tick(dep: Deployment, offered_gbps: float, dt_s: float,
                         backlog_pkts: float, max_sim_seqs: int = 96,
                         hop_pen: Optional[Dict[Tuple[str, str], float]] = None,
                         served_pkts: Optional[float] = None,
-                        capacity_scale: float = 1.0
-                        ) -> Tuple[float, float, float, float]:
+                        capacity_scale: float = 1.0,
+                        return_samples: bool = False):
     """One tick of the latency/throughput model.
 
     Returns (p50_s, p99_s, achieved_gbps, new_backlog_pkts). Achieved rate is
@@ -176,6 +221,12 @@ def measure_tenant_tick(dep: Deployment, offered_gbps: float, dt_s: float,
     NIC. The backlog models demand the placement could not serve this tick
     (drained when capacity exceeds offered load again); it is the ingress
     queue depth the governor schedules against next tick.
+
+    With ``return_samples=True`` a fifth element is returned: the tick's
+    individual per-sequence latency samples (backlog delay included), the
+    raw stream the observability layer's histograms measure exact
+    percentiles over — as opposed to the legacy p99 above, which is a
+    percentile of one tick's simulated window plus a backlog *formula*.
     """
     cap_pps = (max(0.0, dep.achievable_gbps) * 1e9 / PKT_BITS
                * min(1.0, max(0.0, capacity_scale)))
@@ -188,6 +239,8 @@ def measure_tenant_tick(dep: Deployment, offered_gbps: float, dt_s: float,
     achieved_gbps = (served / dt_s) * PKT_BITS / 1e9 if dt_s > 0 else 0.0
 
     if off_pps <= 0.0 or served <= 0.0:
+        if return_samples:
+            return 0.0, 0.0, achieved_gbps, new_backlog, np.zeros(0)
         return 0.0, 0.0, achieved_gbps, new_backlog
 
     # Per-packet stage latencies from the profile (l_s is per sequence batch).
@@ -204,4 +257,6 @@ def measure_tenant_tick(dep: Deployment, offered_gbps: float, dt_s: float,
     backlog_delay = new_backlog / cap_pps if cap_pps > 0 else 0.0
     p50 = float(np.percentile(lat, 50)) + backlog_delay
     p99 = float(np.percentile(lat, 99)) + backlog_delay
+    if return_samples:
+        return p50, p99, achieved_gbps, new_backlog, lat + backlog_delay
     return p50, p99, achieved_gbps, new_backlog

@@ -68,6 +68,48 @@ def test_zero_steady_state_recompiles():
     assert dp.dispatch_stats["compiles"] == 1
 
 
+def test_no_recompiles_after_warmup_via_cache_counters():
+    """ISSUE 7: the process-wide compile-cache counters make zero-steady-
+    state-recompiles an asserted observable — after warmup, further fused
+    dispatches must produce cache HITS only (any miss == a fresh jit)."""
+    from repro.core import graph
+
+    app = ALL_APPS(impl="ref")["ID"]
+    dp = ParallelDataPlane(app, num_pipelines=2, capacity_per_pipeline=32)
+    dp.process(PKTS)                         # warmup compile
+    warm_compiles = dp.dispatch_stats["compiles"]
+    graph.reset_compile_cache_stats()
+    for _ in range(4):
+        dp.process(PKTS)
+    assert dp.dispatch_stats["compiles"] == warm_compiles
+    stats = graph.compile_cache_stats()
+    assert stats["dispatch"]["miss"] == 0, (
+        f"fused dispatch recompiled after warmup: {stats}")
+    assert stats["dispatch"]["hit"] >= 4
+
+
+def test_dataplane_metrics_and_stage_profile():
+    """With a metrics registry attached, dispatch calls/compiles and (in
+    profile mode) per-stage device timings land as labeled series."""
+    from repro.obs import Obs
+
+    obs = Obs()
+    app = ALL_APPS(impl="ref")["FW"]
+    dp = ParallelDataPlane(app, num_pipelines=2, capacity_per_pipeline=32,
+                           metrics=obs.metrics, profile=True)
+    for _ in range(3):
+        dp.process(PKTS)
+    calls = obs.metrics.get("dataplane_dispatch_calls_total", app=app.name)
+    assert calls is not None and calls.value == 3
+    lat = obs.metrics.get("dataplane_dispatch_us", app=app.name)
+    assert lat is not None and lat.count == 3 and lat.quantile(0.5) > 0
+    timings = dp.profile_stages(PKTS)
+    assert set(timings) == set(app.stage_names())
+    for s in app.stage_names():
+        h = obs.metrics.get("dataplane_stage_us", app=app.name, stage=s)
+        assert h is not None and h.count >= 1
+
+
 def test_bucketing_bounds_shapes():
     assert _bucket(1) == MIN_BUCKET
     assert _bucket(16) == 16

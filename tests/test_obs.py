@@ -1,0 +1,189 @@
+"""Observability layer (ISSUE 7): percentiles, metrics registry, decision
+trace — span nesting, queries, and the JSONL artifact round trip."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.apps import ALL_APPS
+from repro.core.controller import MeiliController
+from repro.core.pool import paper_cluster
+from repro.core.profiler import synthetic_profile
+from repro.obs import Obs, load_trace
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.percentiles import P2Quantile, Reservoir
+from repro.obs.trace import DecisionTrace
+
+BITS = 1500 * 8 * 256.0
+ISG_LAT = {"ddos_check": 400e-6, "url_check": 300e-6, "ipsec_encap": 150e-6,
+           "sha": 250e-6, "aes": 350e-6}
+
+
+def isg_profile():
+    app = ALL_APPS(impl="ref")["ISG"]
+    return app, synthetic_profile(app.stage_names(), ISG_LAT, BITS)
+
+
+# -- percentiles --------------------------------------------------------------
+
+def test_reservoir_exact_below_capacity():
+    rng = np.random.default_rng(3)
+    xs = rng.normal(5.0, 2.0, size=1000)
+    r = Reservoir(capacity=4096, seed=0)
+    r.observe_many(xs)
+    assert r.exact
+    for q in (0.5, 0.9, 0.99):
+        assert r.quantile(q) == pytest.approx(
+            float(np.quantile(xs, q)), rel=1e-12, abs=1e-12)
+
+
+def test_reservoir_sampled_above_capacity_stays_close():
+    rng = np.random.default_rng(4)
+    xs = rng.lognormal(0.0, 0.5, size=50_000)
+    r = Reservoir(capacity=4096, seed=1)
+    r.observe_many(xs)
+    assert not r.exact and r.count == 50_000
+    assert r.quantile(0.99) == pytest.approx(
+        float(np.quantile(xs, 0.99)), rel=0.05)
+
+
+def test_p2_tracks_numpy_quantile():
+    rng = np.random.default_rng(5)
+    xs = rng.lognormal(0.0, 0.4, size=20_000)
+    est = P2Quantile(0.99)
+    for x in xs:
+        est.observe(float(x))
+    assert est.value() == pytest.approx(float(np.quantile(xs, 0.99)), rel=0.05)
+
+
+# -- metrics registry ---------------------------------------------------------
+
+def test_registry_label_model_and_prometheus_render():
+    reg = MetricsRegistry()
+    reg.counter("reqs_total", tenant="a").inc()
+    reg.counter("reqs_total", tenant="a").inc(2)
+    reg.counter("reqs_total", tenant="b").inc()
+    # label order never splits a series
+    assert reg.counter("dual", x="1", y="2") is reg.counter("dual", y="2", x="1")
+    assert reg.get("reqs_total", tenant="a").value == 3
+    assert reg.get("reqs_total", tenant="b").value == 1
+    assert reg.get("reqs_total", tenant="zzz") is None
+    assert len(reg.series("reqs_total")) == 2
+
+    h = reg.histogram("lat_us", tenant="a")
+    h.observe_many(np.arange(1.0, 101.0))
+    assert h.count == 100 and h.quantile(0.5) == pytest.approx(50.5, rel=0.02)
+
+    text = reg.render_prometheus()
+    assert 'reqs_total{tenant="a"} 3' in text
+    assert 'lat_us{quantile="0.99",tenant="a"}' in text
+    assert 'lat_us_count{tenant="a"} 100' in text
+
+
+def test_metrics_jsonl_dump(tmp_path):
+    reg = MetricsRegistry()
+    reg.gauge("pool_headroom_gbps", nic="bf2-0").set(7.5)
+    reg.histogram("lat_s", tenant="t").observe(0.25)
+    out = tmp_path / "metrics.jsonl"
+    reg.dump_jsonl(out)
+    recs = [json.loads(l) for l in out.read_text().splitlines()]
+    byname = {(r["name"], tuple(sorted(r["labels"].items()))): r for r in recs}
+    assert byname[("pool_headroom_gbps", (("nic", "bf2-0"),))]["value"] == 7.5
+    assert byname[("lat_s", (("tenant", "t"),))]["count"] == 1
+
+
+# -- decision trace -----------------------------------------------------------
+
+def test_trace_span_nesting_and_why():
+    tr = DecisionTrace()
+    tr.set_tick(7)
+    with tr.span("migrate", tenant="t-a") as outer:
+        tr.event("scale_verdict", tenant="t-a", reason="granted")
+        with tr.span("failover", nic="bf2-1", tenant="t-a"):
+            tr.event("replace_unit", tenant="t-a", nic="bf2-2", kind="fault")
+        outer.note(outcome="committed")
+    spans = tr.spans()
+    mig = next(s for s in spans if s.name == "migrate")
+    fo = next(s for s in spans if s.name == "failover")
+    assert fo.parent_id == mig.span_id and fo.span_id in mig.children
+    assert mig.detail["outcome"] == "committed"
+    assert mig.duration_s is not None and mig.duration_s >= 0
+    # the nested point event is attributed to the innermost open span
+    ev = tr.query(name="replace_unit")[0]
+    assert ev.parent_id == fo.span_id and ev.tick == 7
+    why = tr.why("t-a", 7)
+    assert [e.name for e in why if e.phase != "end"] == [
+        "migrate", "scale_verdict", "failover", "replace_unit"]
+    assert tr.why("t-a", 8) == []
+
+
+def test_controller_submit_migrate_failover_span_story():
+    """ISSUE 7 acceptance slice: a mid-migration crash produces a failover
+    span NESTED inside the migrate span, with the submit span before both —
+    the causal story is readable straight off the trace."""
+    from repro.core.qos import TenantQuota
+
+    ctrl = MeiliController(paper_cluster())
+    app, prof = isg_profile()
+    ctrl.governor.register("t-isg", TenantQuota(max_gbps=5.0))
+    ctrl.submit(app, target_gbps=7.0, profile=prof, tenant="t-isg")
+
+    def on_swap(app_name):
+        nic = sorted(ctrl.deployments[app_name].nics_used())[0]
+        ctrl.handle_failure(nic)
+
+    ctrl.mid_migration_hook = on_swap
+    ev = ctrl.migrate(app.name, forced=True, require_improvement=False)
+    assert ev is not None
+
+    tr = ctrl.obs.trace
+    sub = tr.spans(name="submit")[0]
+    mig = tr.spans(name="migrate")[0]
+    fo = tr.spans(name="failover")[0]
+    assert sub.parent_id is None and sub.span_id < mig.span_id
+    assert fo.parent_id == mig.span_id          # crash landed mid-migration
+    assert mig.detail["outcome"] == "committed"
+    assert sub.detail["granted_gbps"] >= 5.0
+    # the governor's admission clamp was audited into the SAME trace, inside
+    # the submit span (7.0 asked, quota caps at 5.0)
+    clamp = tr.query(name="admission_verdict", tenant="t-isg") or \
+        tr.query(name="admission_clamp", tenant="t-isg")
+    assert clamp and clamp[0].parent_id == sub.span_id
+    assert clamp[0].detail["granted_gbps"] == pytest.approx(5.0)
+
+
+def test_trace_jsonl_round_trip_identical_queries(tmp_path):
+    ctrl = MeiliController(paper_cluster())
+    app, prof = isg_profile()
+    ctrl.submit(app, target_gbps=5.0, profile=prof, tenant="t-isg")
+    ctrl.obs.trace.set_tick(3)
+    ctrl.migrate(app.name, forced=True, require_improvement=False)
+    live = ctrl.obs.trace
+
+    path = tmp_path / "trace.jsonl"
+    live.dump_jsonl(path)
+    loaded = load_trace(path)
+
+    assert [e.to_json() for e in loaded.events] == \
+           [e.to_json() for e in live.events]
+    for q in ({"name": "migrate"}, {"tenant": "t-isg"},
+              {"kind": "decision"}, {"tick": 3}):
+        assert [e.to_json() for e in loaded.query(**q)] == \
+               [e.to_json() for e in live.query(**q)]
+    assert [e.to_json() for e in loaded.why("t-isg", 3)] == \
+           [e.to_json() for e in live.why("t-isg", 3)]
+    assert loaded.spans() == live.spans()
+    # a loaded trace keeps recording without seq/span-id collisions
+    before = {e.seq for e in loaded.events}
+    loaded.event("post_mortem_note", kind="mark")
+    assert loaded.events[-1].seq not in before
+
+
+def test_obs_dump_artifacts(tmp_path):
+    obs = Obs()
+    obs.metrics.counter("c_total").inc()
+    obs.trace.event("hello", tenant="t")
+    paths = obs.dump(tmp_path / "art")
+    tr = load_trace(paths["trace"])
+    assert tr.query(name="hello")[0].tenant == "t"
+    assert "c_total 1" in (tmp_path / "art" / "metrics.prom").read_text()

@@ -1,0 +1,189 @@
+"""ISSUE 7 acceptance: the chaos benchmark's dumped trace artifact must let
+a post-mortem reconstruct a gray failure's full story FROM THE FILE ALONE —
+suspicion ramp, quarantine verdict (reason + observers), drain migration
+spans, re-admission — and the runtime must report measured percentiles
+beside the legacy estimator from one shared telemetry pass."""
+import dataclasses
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core.controller import MeiliController
+from repro.core.faults import (GRAY, ChaosEngine, FaultEvent, FaultPlan)
+from repro.core.pool import paper_cluster
+from repro.obs import Obs, load_trace
+from repro.service.runtime import RuntimeConfig, ServiceRuntime
+from repro.service.telemetry import TelemetryLog, TenantTick
+from repro.service.tenants import (TenantRegistry, contracts,
+                                   default_tenant_mix)
+from repro.service.workload import make_scenario
+
+FAST = RuntimeConfig(dataplane_every=0, max_sim_seqs=32)
+
+
+def make_runtime(scenario="steady", cfg=FAST, seed=0):
+    ctrl = MeiliController(paper_cluster())
+    registry = TenantRegistry(ctrl)
+    mix = default_tenant_mix()
+    for spec in mix:
+        registry.register(spec)
+    wl = make_scenario(scenario, contracts(mix), seed=seed)
+    rt = ServiceRuntime(ctrl, registry, wl, cfg)
+    registry.admit_all()
+    return rt
+
+
+# -- the acceptance criterion -------------------------------------------------
+
+def test_chaos_artifact_reconstructs_gray_story(tmp_path):
+    """Run the same fast chaos arm ``make bench-chaos`` runs, then drop every
+    live object and answer the post-mortem entirely from trace.jsonl."""
+    from benchmarks.bench_service import CHAOS_FAST_TICKS, _run_chaos_arm
+
+    rec = _run_chaos_arm(True, CHAOS_FAST_TICKS, seed=0,
+                         obs_dir=str(tmp_path))
+    sick = rec["gray_nic"]
+    path = pathlib.Path(rec["obs_artifacts"]["trace"])
+    assert path.exists()
+
+    tr = load_trace(path)                      # the file is the only witness
+
+    # 0) the injected fault itself is on the record
+    inj = tr.query(name="gray", nic=sick, kind="fault")
+    assert inj and "frac" in inj[0].detail["detail"]
+
+    # 1) suspicion ramp: evidence ticks with a rising streak, each naming
+    #    the tenants whose shortfall testified against the NIC
+    susp = tr.query(name="gray_suspicion", nic=sick)
+    assert len(susp) >= 3
+    streaks = [e.detail["streak"] for e in susp]
+    assert max(streaks) >= 3 and streaks[0] == 1
+    assert all(e.detail["observers"] for e in susp)
+    assert all(e.tick >= inj[0].tick for e in susp)
+
+    # 2) quarantine verdict: a decision with a human-readable reason and
+    #    the observer set that convicted the NIC
+    verdicts = tr.query(name="quarantine_verdict", nic=sick)
+    assert len(verdicts) == 1
+    v = verdicts[0]
+    assert "suspicion" in v.detail["reason"] and ">" in v.detail["reason"]
+    assert v.detail["suspicion"] >= 0.3 and v.detail["streak"] >= 3
+    assert set(v.detail["observers"]) <= {e.tenant for e in tr.events
+                                          if e.tenant}
+    assert v.seq > susp[0].seq                 # verdict follows the evidence
+
+    # 3) drain: a gray_drain span on the sick NIC whose CHILDREN are the
+    #    forced migrate spans (and any escalation failover) it caused
+    drains = [s for s in tr.spans(name="gray_drain") if s.nic == sick]
+    assert len(drains) == 1 and drains[0].tick_begin == v.tick
+    kids = [s for s in tr.spans() if s.parent_id == drains[0].span_id]
+    assert kids and all(k.name in ("migrate", "failover") for k in kids)
+    assert any(k.name == "migrate" and k.detail.get("forced") for k in kids)
+
+    # 4) re-admission: the quarantined NIC revives in the repair wave, and
+    #    every parked tenant is readmitted — all after the verdict
+    revives = [e for e in tr.query(name="revive", kind="fault")
+               if sick in (e.nic or "")]
+    assert revives and revives[0].tick > v.tick
+    parked = tr.query(name="parked", kind="fault")
+    readmitted = tr.query(name="readmitted", kind="fault")
+    assert {e.tenant for e in parked} == {e.tenant for e in readmitted}
+    assert len(readmitted) == rec["readmissions"]
+
+    # the whole story is causally ordered by seq
+    chapter = [inj[0].seq, susp[0].seq, v.seq, revives[0].seq]
+    assert chapter == sorted(chapter)
+
+
+# -- measured p99 beside the legacy estimator ---------------------------------
+
+def test_measured_p99_recorded_beside_legacy():
+    rt = make_runtime(scenario="bursty", seed=2)
+    rt.run(16)
+    for tenant in rt.registry.active():
+        s = rt.telemetry.series(tenant)
+        assert s and all(t.p99_measured_s > 0 for t in s if t.p99_s > 0)
+        # the recorded value IS the registry histogram's quantile (the
+        # cumulative sample stream), not a copy of the per-tick estimator
+        hist = rt.obs.metrics.get("tenant_latency_s", tenant=tenant)
+        assert hist is not None and hist.count > 0
+        assert s[-1].p99_measured_s == pytest.approx(hist.quantile(0.99))
+    summ = rt.telemetry.summary()
+    for tenant, row in summ.items():
+        assert row["p99_measured_s_max"] > 0
+        assert row["p99_s_max"] > 0
+
+
+# -- telemetry single-pass consistency (satellite 6) --------------------------
+
+def _tick(tick, tenant, ok, grace=False, p99=0.01):
+    return TenantTick(tick=tick, tenant=tenant, offered_gbps=1.0,
+                      achieved_gbps=1.0, p50_s=p99 / 2, p99_s=p99, units=1,
+                      slo_ok=ok, in_grace=grace, p99_measured_s=p99)
+
+
+def test_summary_and_slo_report_share_warmup_window():
+    log = TelemetryLog(warmup_ticks=4)
+    for tick in range(10):
+        log.record(_tick(tick, "t-a", ok=(tick != 6)))
+        log.record(_tick(tick, "t-b", ok=True, grace=(tick == 5)))
+    rep = log.slo_report()                     # defaults to warmup_ticks=4
+    assert rep["t-a"] == {"ticks": 6, "violations": 1,
+                          "violation_frac": pytest.approx(1 / 6),
+                          "pass": False}
+    assert rep["t-b"]["ticks"] == 5            # grace tick not counted
+    assert log.slo_tick_count() == 5 + 5
+    summ = log.summary()
+    assert summ["t-a"]["ticks"] == 6 and summ["t-b"]["ticks"] == 6
+    # explicit override still wins over the shared default
+    assert log.slo_report(warmup_ticks=0)["t-a"]["ticks"] == 10
+    assert log.summary(warmup_ticks=0)["t-a"]["ticks"] == 10
+
+
+def test_incremental_grouping_stays_correct_under_interleaving():
+    """series()/summary() may be called mid-run; records appended afterwards
+    must still land in the one-pass index."""
+    log = TelemetryLog()
+    log.record(_tick(0, "t-a", ok=True))
+    assert len(log.series("t-a")) == 1         # builds the index early
+    log.record(_tick(1, "t-a", ok=True))
+    log.record(_tick(1, "t-b", ok=False))
+    assert [t.tick for t in log.series("t-a")] == [0, 1]
+    assert len(log.series("t-b")) == 1
+    assert log.summary()["t-a"]["ticks"] == 2
+    assert log.slo_report()["t-b"]["violations"] == 1
+
+
+def test_fault_records_mirror_into_trace():
+    obs = Obs()
+    log = TelemetryLog(trace=obs.trace)
+    log.record_fault(7, "crash", nic="bf2-0", tenant="t-a", detail="boom")
+    ev = obs.trace.query(name="crash", kind="fault")
+    assert len(ev) == 1 and ev[0].tick == 7 and ev[0].nic == "bf2-0"
+    assert ev[0].detail["detail"] == "boom"
+    assert log.faults("crash")[0].tenant == "t-a"
+
+
+# -- gray detector events without a full chaos run ----------------------------
+
+def test_runtime_gray_quarantine_events_match_telemetry(tmp_path):
+    """The compact gray scenario from test_faults, seen through the trace:
+    the dumped artifact alone carries suspicion -> verdict -> drain."""
+    cfg = dataclasses.replace(FAST, gray_detect=True)
+    rt = make_runtime(scenario="steady", cfg=cfg, seed=1)
+    usage = {}
+    for dep in rt.ctrl.deployments.values():
+        for n, row in dep.allocation.A.items():
+            usage[n] = usage.get(n, 0) + sum(row.values())
+    sick = max(usage, key=lambda n: (usage[n], n))
+    rt.run(24, chaos=ChaosEngine(FaultPlan(
+        [FaultEvent(tick=4, kind=GRAY, nic=sick, fraction=0.25)])))
+
+    art = rt.obs.dump(tmp_path)
+    tr = load_trace(art["trace"])
+    quarantined = {f.nic for f in rt.telemetry.faults("gray_quarantined")}
+    assert {e.nic for e in tr.query(name="gray_quarantined")} == quarantined
+    if sick in quarantined:
+        assert tr.query(name="quarantine_verdict", nic=sick)
+        assert [s for s in tr.spans(name="gray_drain") if s.nic == sick]
