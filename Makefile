@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-slow bench bench-obs bench-dataplane bench-service bench-defrag bench-qos bench-chaos check-bench
+.PHONY: test test-slow bench bench-obs bench-dataplane bench-service bench-defrag bench-qos bench-chaos bench-control check-bench
 
 # Tier-1 suite. pytest.ini excludes `slow` tests by default (the small
 # dry-run compiles a full train step and can take minutes), so this can
@@ -56,3 +56,11 @@ bench-qos:
 # metrics artifacts for both arms under ./obs_artifacts.
 bench-chaos:
 	python -m benchmarks.bench_service --scenario chaos --emit-obs
+
+# Control-plane cost A/B (ISSUE 8): sharded+vectorized scheduling kernel vs
+# the legacy scalar path at 100..1000 tenants on a synthetic 500-NIC rack;
+# merges the `control` record into BENCH_service.json. The flat-control-
+# cost bar (growth <= 1.5x from 100 to 1000 tenants) is gated by
+# `make check-bench`.
+bench-control:
+	python -m benchmarks.bench_control

@@ -1,0 +1,301 @@
+"""Control-plane cost benchmark (ISSUE 8): sharded+vectorized vs legacy.
+
+Measures the per-tick *control* cost — burst-credit refill, headroom
+bookkeeping, scale verdicts, DWRR scheduling, backlog drain math, and the
+telemetry reduction — at tenant counts up to 1000 on a synthetic 500-NIC /
+10-rack pool. Two arms do the same logical work each tick:
+
+  legacy       the scalar path: per-tenant Python dict loops
+               (``ResourceGovernor.begin_tick`` + ``scale_verdict`` per
+               tenant + the scalar ``dwrr_schedule`` + per-tenant backlog
+               and telemetry accumulation), with the full-pool headroom
+               scan every tick.
+  vectorized   the sharded control plane's array program
+               (``core.sched_kernel``): tenants as rows of stacked arrays,
+               one jitted ``refill_credits`` + ``scale_decisions`` +
+               ``dwrr_step`` + ``queue_drain`` + ``telemetry_accumulate``
+               per tick; host work is O(rescales), not O(tenants); the
+               headroom scan is the shards' digest refresh, amortized over
+               the reconcile staleness bound.
+
+The arm drives the kernels on persistent stacked arrays directly — the
+end state of the refactor — rather than through the dict adapter
+(``VectorizedScheduler``) the drop-in runtime path uses: the adapter's
+dict marshalling is O(tenants) Python and exists for bit-compatibility,
+not for the 1000-tenant regime this benchmark scores.
+
+Acceptance (gated by ``check_bench``): the vectorized arm's per-tick cost
+grows <= ``flatness_bar`` (1.5x) from the smallest to the largest tenant
+count — i.e. control cost is ~flat in tenant count — with zero
+steady-state recompiles; the record lands in ``BENCH_service.json`` under
+``control``.
+
+Run:        PYTHONPATH=src python -m benchmarks.bench_control
+Smoke (CI): PYTHONPATH=src python -m benchmarks.bench_control --fast
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import row
+from repro.core import sched_kernel as sk
+from repro.core.pool import paper_cluster
+from repro.core.qos import ResourceGovernor, TenantQuota
+from repro.core.shard import ControlShard
+from repro.obs.runlog import RunLogger
+
+TENANT_COUNTS = [100, 300, 1000]
+TICKS = 24
+FAST_TICKS = 6
+WARMUP = 2
+STALENESS = 4
+FLATNESS_BAR = 1.5
+
+# Synthetic rack at the ROADMAP's target scale: 500 NICs over 10 racks.
+POOL = dict(n_bf2=250, n_bf1=125, n_pensando=125, racks=10)
+DT_S = 0.1
+PKT_BITS = 12000.0
+
+
+def _mk_pool():
+    return paper_cluster(**POOL)
+
+
+def _tenant_params(n: int, seed: int):
+    """Deterministic per-tenant contract/quota/traffic parameters."""
+    rng = np.random.default_rng(seed)
+    names = [f"t{i:04d}" for i in range(n)]
+    return {
+        "names": names,
+        "weight": rng.choice([1.0, 2.0, 4.0], size=n),
+        "contract": rng.uniform(2.0, 12.0, size=n),
+        "quota": np.where(rng.random(n) < 0.5,
+                          rng.uniform(6.0, 20.0, size=n), np.inf),
+        "burst": rng.uniform(0.0, 4.0, size=n),
+        "refill": rng.uniform(0.2, 1.0, size=n),
+        "phase": rng.uniform(0.0, 2 * np.pi, size=n),
+    }
+
+
+def _offered(p, tick: int) -> np.ndarray:
+    """Diurnal-ish offered load, identical on both arms."""
+    return p["contract"] * (0.7 + 0.4 * np.sin(0.3 * tick + p["phase"]))
+
+
+# -- legacy arm ----------------------------------------------------------------
+
+def _legacy_arm(n: int, ticks: int, seed: int) -> float:
+    """Mean per-tick seconds of the scalar control path."""
+    pool = _mk_pool()
+    p = _tenant_params(n, seed)
+    names = p["names"]
+    gov = ResourceGovernor()
+    for i, t in enumerate(names):
+        gov.register(t, TenantQuota(
+            weight=float(p["weight"][i]),
+            max_gbps=(None if np.isinf(p["quota"][i])
+                      else float(p["quota"][i])),
+            burst_gbps=float(p["burst"][i]),
+            burst_refill_gbps=float(p["refill"][i])))
+    current = {t: float(p["contract"][i]) for i, t in enumerate(names)}
+    backlog = {t: 0.0 for t in names}
+    stats = {t: [0, 0.0, 0.0, -np.inf] for t in names}   # n, off, ach, max
+    times = []
+    for tick in range(ticks):
+        off = _offered(p, tick)
+        t0 = time.perf_counter()
+        # credit refill + full-pool headroom scan, every tick
+        gov.begin_tick(pool=pool, active=names)
+        caps_b, queues = {}, {}
+        for i, t in enumerate(names):
+            v = gov.scale_verdict(
+                t, est_gbps=float(off[i]), offered_gbps=float(off[i]),
+                contract_gbps=float(p["contract"][i]),
+                current_gbps=current[t],
+                achievable_gbps=current[t])
+            if v.rescale:
+                current[t] = v.target_gbps
+            cap_pps = current[t] * 1e9 / PKT_BITS
+            off_pps = float(off[i]) * 1e9 / PKT_BITS
+            queues[t] = off_pps * DT_S + backlog[t]
+            caps_b[t] = cap_pps * DT_S
+        budget = 0.6 * sum(queues.values())
+        _, served = gov.dwrr_schedule(queues, caps_b,
+                                      capacity_bytes=budget)
+        for i, t in enumerate(names):
+            got = min(queues[t], caps_b[t], served[t])
+            backlog[t] = queues[t] - got
+            ach = got / DT_S * PKT_BITS / 1e9
+            s = stats[t]
+            s[0] += 1
+            s[1] += float(off[i])
+            s[2] += ach
+            s[3] = max(s[3], backlog[t])
+        times.append(time.perf_counter() - t0)
+    return float(np.mean(times[WARMUP:]))
+
+
+# -- sharded + vectorized arm --------------------------------------------------
+
+def _vectorized_arm(n: int, ticks: int, seed: int) -> tuple:
+    """Mean per-tick seconds of the array-program control path, plus the
+    steady-state kernel recompile count (must be zero)."""
+    pool = _mk_pool()
+    p = _tenant_params(n, seed)
+    racks = sorted({st.spec.rack for st in pool.nics.values()})
+    shards = [ControlShard(r, pool.rack_members(r)) for r in racks]
+    for sh in shards:
+        sh.refresh(pool, -1)
+
+    pad = sk.pad_rows(n)
+    mask = np.zeros(pad, np.float32)
+    mask[:n] = 1.0
+
+    def col(x, fill=0.0):
+        out = np.full(pad, fill, np.float32)
+        out[:n] = x
+        return jnp.asarray(out)
+
+    mask_j = jnp.asarray(mask)
+    weights = col(p["weight"])
+    contract = col(p["contract"])
+    quota = col(p["quota"], fill=np.inf)
+    depth = col(p["burst"])
+    refill = col(p["refill"])
+    phase = np.concatenate([p["phase"], np.zeros(pad - n)])
+    credits = col(p["burst"])
+    current = col(p["contract"])
+    deficits = jnp.zeros(pad, jnp.float32)
+    backlog = jnp.zeros(pad, jnp.float32)
+    tele = sk.telemetry_state(pad)
+    ring_offset = 0
+    times = []
+    rescale_rows = 0
+    for tick in range(ticks):
+        offered = (np.asarray(contract)
+                   * (0.7 + 0.4 * np.sin(0.3 * tick + phase))
+                   ).astype(np.float32)
+        off_j = jnp.asarray(offered * mask)
+        t0 = time.perf_counter()
+        # reconcile: digest refresh amortized over the staleness bound
+        if tick % STALENESS == 0:
+            for sh in shards:
+                sh.refresh(pool, tick)
+        if tick == WARMUP:
+            sk.reset_trace_counts()
+        credits = sk.refill_credits(credits, depth, refill)
+        granted, rescale, _, _, _ = sk.scale_decisions(
+            off_j, off_j, contract, current, current, quota, credits,
+            weights, jnp.float32(1.0), jnp.float32(4.0), jnp.float32(1.15),
+            jnp.float32(0.2), jnp.float32(0.92), jnp.float32(0.1))
+        # host walks only the sparse flagged rows (the O(rescales) side)
+        flagged = np.nonzero(np.asarray(rescale))[0]
+        rescale_rows += len(flagged)
+        current = jnp.where(rescale, granted, current)
+        cap_pps = current * (1e9 / PKT_BITS)
+        off_pps = off_j * (1e9 / PKT_BITS)
+        queues = off_pps * DT_S + backlog
+        caps_b = cap_pps * DT_S
+        budget = 0.6 * float(jnp.sum(queues))
+        served, deficits, _, rounds = sk.dwrr_step(
+            queues, weights, deficits, caps_b, mask_j,
+            jnp.float32(budget), jnp.int32(ring_offset))
+        ring_offset = (ring_offset + int(rounds)) % pad
+        got, backlog, ach_pps = sk.queue_drain(
+            off_pps, backlog, cap_pps, served, jnp.float32(DT_S))
+        tele = sk.telemetry_accumulate(
+            tele, off_j, ach_pps * (PKT_BITS / 1e9), backlog,
+            jnp.zeros_like(off_j), mask_j)
+        tele[0].block_until_ready()
+        times.append(time.perf_counter() - t0)
+    recompiles = sum(sk.trace_counts().values())
+    return float(np.mean(times[WARMUP:])), recompiles, rescale_rows
+
+
+# -- harness -------------------------------------------------------------------
+
+def run(emit=print, fast: bool = False, seed: int = 0) -> dict:
+    ticks = FAST_TICKS if fast else TICKS
+    legacy, vector, recompiles = {}, {}, {}
+    for n in TENANT_COUNTS:
+        legacy[n] = _legacy_arm(n, ticks, seed)
+        vector[n], recompiles[n], _ = _vectorized_arm(n, ticks, seed)
+        emit(row(f"control_tick_legacy_{n}", legacy[n] * 1e6,
+                 f"{n}tenants"))
+        emit(row(f"control_tick_vectorized_{n}", vector[n] * 1e6,
+                 f"{n}tenants_recompiles{recompiles[n]}"))
+    lo, hi = min(TENANT_COUNTS), max(TENANT_COUNTS)
+    rec = {
+        "fast": fast,
+        "seed": seed,
+        "ticks": ticks,
+        "pool": dict(POOL, nics=sum(
+            v for k, v in POOL.items() if k != "racks")),
+        "tenant_counts": TENANT_COUNTS,
+        "staleness_ticks": STALENESS,
+        "legacy_us_per_tick": {str(n): legacy[n] * 1e6
+                               for n in TENANT_COUNTS},
+        "vectorized_us_per_tick": {str(n): vector[n] * 1e6
+                                   for n in TENANT_COUNTS},
+        "speedup": {str(n): legacy[n] / vector[n] for n in TENANT_COUNTS},
+        "flatness_legacy": legacy[hi] / legacy[lo],
+        "flatness_vectorized": vector[hi] / vector[lo],
+        "flatness_bar": FLATNESS_BAR,
+        "steady_state_recompiles": sum(recompiles.values()),
+    }
+    rec["pass"] = bool(rec["flatness_vectorized"] <= FLATNESS_BAR
+                       and rec["speedup"][str(hi)] > 1.0
+                       and rec["steady_state_recompiles"] == 0)
+    emit(row("control_flatness", 0,
+             f"vec{rec['flatness_vectorized']:.2f}x_"
+             f"legacy{rec['flatness_legacy']:.2f}x_bar{FLATNESS_BAR}x"))
+    emit(row("control_speedup_1000", 0,
+             f"{rec['speedup'][str(hi)]:.1f}x"))
+    emit(row("control", 0, f"pass={rec['pass']}"))
+    return rec
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smoke mode: fewer ticks")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: repo-root "
+                         "BENCH_service.json, merged under 'control')")
+    args = ap.parse_args(argv)
+
+    logger = RunLogger("bench_control")
+    logger.note(fast=args.fast, seed=args.seed)
+    logger.emit("name,us_per_call,derived")
+    rec = run(emit=logger.emit, fast=args.fast, seed=args.seed)
+    out = (pathlib.Path(args.out) if args.out else
+           pathlib.Path(__file__).resolve().parent.parent
+           / "BENCH_service.json")
+    # Merge into the existing service JSON (the partial-record pattern):
+    # the control A/B is one more self-describing record beside defrag/
+    # qos/chaos, not a separate artifact.
+    payload = {}
+    if out.exists():
+        try:
+            payload = json.loads(out.read_text())
+        except ValueError:
+            payload = {}
+    payload["control"] = rec
+    payload["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    logger.close()
+    print(f"# wrote {out}")
+    if not rec["pass"]:
+        raise SystemExit("control benchmark below acceptance bars")
+
+
+if __name__ == "__main__":
+    main()

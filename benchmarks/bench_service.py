@@ -334,8 +334,9 @@ def _chaos_plan(ticks: int, flap_nic: str, gray_nic: str) -> FaultPlan:
     """The compound fault sequence, identical on both arms: an early link
     flap, a silent gray degradation on a busy surviving-rack NIC, a crash
     landed inside a make-before-break migration window, a correlated rack
-    outage taking half the pool, and a late repair wave (rack revive + the
-    gray NIC replaced)."""
+    outage taking half the pool, and a late repair wave that ends the
+    incident — every NIC still down (the rack, the gray NIC, and whichever
+    NIC the mid-migration crash hit) is replaced."""
     T = ticks
     return FaultPlan([
         FaultEvent(tick=max(2, int(0.11 * T)), kind=FLAP, nic=flap_nic,
@@ -344,8 +345,7 @@ def _chaos_plan(ticks: int, flap_nic: str, gray_nic: str) -> FaultPlan:
                    fraction=0.25),
         FaultEvent(tick=int(0.44 * T), kind=MID_MIGRATION),
         FaultEvent(tick=int(0.55 * T), kind=RACK, rack=CHAOS_RACK),
-        FaultEvent(tick=int(0.72 * T), kind=REVIVE, rack=CHAOS_RACK),
-        FaultEvent(tick=int(0.72 * T), kind=REVIVE, nic=gray_nic),
+        FaultEvent(tick=int(0.72 * T), kind=REVIVE),
     ])
 
 

@@ -4,7 +4,10 @@ numbers in ``BENCH_service.json`` against the recorded baseline.
 Checked, each within the tolerance declared in ``bench_baseline.json``:
 
   * the two efficiency ratio bars (pooled vs standalone / vs microservice);
-  * the chaos A/B's SLO-tick counts (and that recovery-on still dominates).
+  * the chaos A/B's SLO-tick counts (and that recovery-on still dominates);
+  * the control-plane A/B's flat-cost bar (ISSUE 8): the sharded+vectorized
+    arm's per-tick cost growth from 100 to 1000 tenants stays <=
+    ``control_flatness_max``, with zero steady-state kernel recompiles.
 
 Fast-mode records are skipped per check: ``--fast``/partial runs use fewer
 ticks, so their numbers are not comparable to the recorded full-mode
@@ -79,6 +82,34 @@ def check(bench: dict, baseline: dict, emit=print) -> bool:
             good = on > off
             emit(f"check-bench: {'ok  ' if good else 'FAIL'} chaos "
                  f"dominance on({on}) > off({off})")
+            ok = ok and good
+
+    # Control-plane flatness (ISSUE 8): the sharded+vectorized arm's
+    # per-tick cost must stay ~flat in tenant count. Self-describing
+    # record; fast-mode runs are still gated (the flatness RATIO is scale-
+    # free — fewer ticks change the absolute µs, not the growth shape).
+    control = bench.get("control")
+    bar = baseline.get("control_flatness_max")
+    if control is None or bar is None:
+        emit("check-bench: no control record, skipped")
+    else:
+        cur = control.get("flatness_vectorized")
+        if cur is None:
+            emit("check-bench: FAIL control flatness missing")
+            ok = False
+        else:
+            good = cur <= bar
+            counts = control.get("tenant_counts", [])
+            span = (f"{min(counts)}->{max(counts)}" if counts else "?")
+            emit(f"check-bench: {'ok  ' if good else 'FAIL'} control "
+                 f"flatness {cur:.2f}x over {span} tenants "
+                 f"(bar {bar:.1f}x)")
+            ok = ok and good
+        rec = control.get("steady_state_recompiles")
+        if rec is not None:
+            good = rec == 0
+            emit(f"check-bench: {'ok  ' if good else 'FAIL'} control "
+                 f"steady-state recompiles = {rec}")
             ok = ok and good
     return ok
 

@@ -14,6 +14,9 @@ Prints ``name,us_per_call,derived`` CSV rows. Mapping:
                         + QoS flash-crowd isolation A/B and adversarial-churn
                         records (ISSUE 4) + chaos fault-injection A/B with
                         recovery on/off (ISSUE 6); writes BENCH_service.json
+  bench_control      -> control-plane cost at 100..1000 tenants, sharded+
+                        vectorized vs legacy (ISSUE 8; merges the `control`
+                        record into BENCH_service.json)
 
 Run one module headlessly:   python -m benchmarks.bench_dataplane
 Run everything:              python -m benchmarks.run   (or: make bench)
@@ -25,10 +28,10 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (bench_adaptive, bench_bandwidth, bench_dataplane,
-                        bench_efficiency, bench_kernels, bench_pipeline,
-                        bench_redirection, bench_scalability, bench_service,
-                        bench_state)
+from benchmarks import (bench_adaptive, bench_bandwidth, bench_control,
+                        bench_dataplane, bench_efficiency, bench_kernels,
+                        bench_pipeline, bench_redirection, bench_scalability,
+                        bench_service, bench_state)
 from repro.obs.runlog import RunLogger
 
 ALL = [
@@ -42,6 +45,7 @@ ALL = [
     ("kernels", bench_kernels),
     ("dataplane", bench_dataplane),
     ("service", bench_service),
+    ("control", bench_control),
 ]
 
 

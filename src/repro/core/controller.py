@@ -119,8 +119,50 @@ class MeiliController:
 
     def _emit(self, event: dict) -> None:
         self.events.append(event)
+        labels = {"op": event.get("event", "")}
+        shard = self.shard_of(event.get("tenant") or event.get("app"))
+        if shard is not None:
+            labels["shard"] = shard
+        self.obs.metrics.counter("controller_ops_total", **labels).inc()
         for fn in self.hooks:
             fn(event)
+
+    # -- shard facade hooks (ISSUE 8) ------------------------------------------
+    # The legacy controller IS the 0-shard layout: placement sees the whole
+    # pool, reconciliation is a no-op, and nothing carries a shard label.
+    # ``core.shard.ShardedController`` overrides these to route placement
+    # through per-rack ControlShards.
+    def shard_of(self, tenant: Optional[str]) -> Optional[str]:
+        """Owning shard of a tenant (None in the unsharded layout)."""
+        return None
+
+    def shard_of_nic(self, nic: Optional[str]) -> Optional[str]:
+        """Owning shard of a NIC (None in the unsharded layout)."""
+        return None
+
+    def reconcile(self, tick: Optional[int] = None) -> None:
+        """Cross-shard reconciliation step (headroom digests, bounded
+        staleness). The unsharded controller reads pool truth directly —
+        nothing to reconcile."""
+        return None
+
+    def _alloc_for(self, tenant: str, stages, demand: Dict[str, int],
+                   t_s, need: Dict[str, str], op: str = "place"):
+        """Placement hook every allocation (submit / scale growth /
+        failover re-place) routes through. The sharded controller
+        restricts this to the owning shard's NICs, spilling cross-rack
+        when the shard cannot fit the demand."""
+        return resource_alloc(stages, demand, t_s, self.pool, need)
+
+    def drain_nic_candidates(self, nic: str,
+                             exclude: Optional[set] = None) -> List[List[str]]:
+        """Candidate NIC sets for draining deployments off ``nic``
+        (gray-failure probation), in preference order. The sharded
+        controller prepends the sick NIC's shard-local healthy set so
+        drains stay within the failure domain when possible."""
+        exclude = exclude or set()
+        return [[n for n in self.pool.names()
+                 if n != nic and n not in exclude]]
 
     def _account(self, dep: Deployment) -> None:
         """Resync the pool's per-tenant usage ledger from the deployment's
@@ -158,8 +200,8 @@ class MeiliController:
                                                          target_gbps)
             R, r_s, t_R = self.demand(profile, target_gbps)
             need = app.resource_needs()
-            alloc = resource_alloc(profile.stages, r_s, profile.t_s,
-                                   self.pool, need)
+            alloc = self._alloc_for(tenant or app.name, profile.stages, r_s,
+                                    profile.t_s, need, op="submit")
             commit(self.pool, alloc, need)
             achievable = self._achievable(profile, alloc, r_s)
             num_pipes = max(1, max((alloc.units(s) for s in profile.stages),
@@ -214,8 +256,9 @@ class MeiliController:
 
         if any(d > 0 for d in delta.values()):
             grow = {s: max(0, d) for s, d in delta.items()}
-            extra = resource_alloc(dep.profile.stages, grow, dep.profile.t_s,
-                                   self.pool, need)
+            extra = self._alloc_for(dep.tenant or app_name,
+                                    dep.profile.stages, grow,
+                                    dep.profile.t_s, need, op="scale")
             commit(self.pool, extra, need)
             dep.allocation.merge(extra)
         if any(d < 0 for d in delta.values()):
@@ -366,10 +409,11 @@ class MeiliController:
                         dep.tenant or name, lost, held_units=held)
                     lost_demand = {s: capped.get(s, 0)
                                    for s in dep.profile.stages}
-                    replacement = resource_alloc(dep.profile.stages,
-                                                 lost_demand,
-                                                 dep.profile.t_s, self.pool,
-                                                 need)
+                    replacement = self._alloc_for(dep.tenant or name,
+                                                  dep.profile.stages,
+                                                  lost_demand,
+                                                  dep.profile.t_s, need,
+                                                  op="failover")
                     commit(self.pool, replacement, need)
                     dep.allocation.merge(replacement)
                     unmet = {s: u for s, u in replacement.unmet.items()

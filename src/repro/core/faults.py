@@ -38,7 +38,7 @@ from typing import Dict, List, Optional, Set
 
 # Fault kinds understood by the ChaosEngine.
 CRASH = "crash"                  # whole-NIC failure -> Appendix-D failover
-REVIVE = "revive"                # repair: NIC (or whole rack) returns, healthy
+REVIVE = "revive"                # repair: NIC / rack / (neither) all failed
 FLAP = "flap"                    # crash + scheduled revive after duration_ticks
 GRAY = "gray"                    # silent degradation to `fraction` of capacity
 RACK = "rack"                    # correlated crash of every NIC in one rack
@@ -106,6 +106,11 @@ class GrayFailureDetector:
         # verdict can name who testified.
         self.trace = None
         self.observers: Dict[str, List[str]] = {}
+        # Acquittal watermarks (ISSUE 8): when localization drains one of
+        # several identically-convicted NICs, the co-accused are *acquitted*
+        # — parked at their current streak, evidence intact — rather than
+        # wiped. See ``acquit``.
+        self.watch: Dict[str, int] = {}
 
     def observe(self, blame: Dict[str, List[float]],
                 observers: Optional[Dict[str, List[str]]] = None) -> None:
@@ -137,13 +142,26 @@ class GrayFailureDetector:
                         deviation=dev, suspicion=self.suspicion[nic],
                         observers=self.observers.get(nic, []))
                 self.streak[nic] = 0
+                self.watch.pop(nic, None)
 
     def suspects(self) -> List[str]:
         return sorted(
             n for n, s in self.suspicion.items()
             if s > self.threshold
             and self.streak.get(n, 0) >= self.min_ticks
+            and self.streak.get(n, 0) > self.watch.get(n, -1)
             and n not in self.probation)
+
+    def acquit(self, nic: str) -> None:
+        """Localization verdict, not exoneration: the drained suspect's
+        co-accused keep their suspicion and streak, but cannot convict again
+        until *fresh* evidence arrives after the drain. If the shared witness
+        recovers once the drained NIC is gone, the co-accused's evidence
+        stops (streak held at the watermark, never above) and its tenants'
+        full service exonerates it; if the witness still deviates on its
+        post-drain placement, the surviving suspect convicts itself on the
+        very next evidence tick — the drain made the evidence diagnostic."""
+        self.watch[nic] = self.streak.get(nic, 0)
 
     def clear(self, nic: str) -> None:
         """Repair observed (revive): the NIC starts over with a clean record."""
@@ -151,6 +169,7 @@ class GrayFailureDetector:
         self.streak.pop(nic, None)
         self.probation.discard(nic)
         self.observers.pop(nic, None)
+        self.watch.pop(nic, None)
 
 
 # ---------------------------------------------------------------------------
@@ -228,13 +247,17 @@ class RecoveryManager:
                     tenant=name, parked_tick=tick,
                     next_retry=tick + self.cfg.base_backoff_ticks,
                     backoff=self.cfg.base_backoff_ticks)
-                self.rt.telemetry.record_fault(tick, "parked", tenant=name)
+                self.rt.telemetry.record_fault(
+                    tick, "parked", tenant=name,
+                    shard=self.rt.ctrl.shard_of(name))
             else:
                 # Never retried: the rejection note keeps churn's pending()
                 # from silently re-admitting what policy just evicted.
                 self.rt.registry.rejected[name] = "evicted (recovery disabled)"
                 self.evicted.append(name)
-                self.rt.telemetry.record_fault(tick, "evicted", tenant=name)
+                self.rt.telemetry.record_fault(
+                    tick, "evicted", tenant=name,
+                    shard=self.rt.ctrl.shard_of(name))
         if swept:
             self._update_brownout()
         return swept
@@ -259,7 +282,8 @@ class RecoveryManager:
                 self.readmissions.append((name, waited))
                 self.rt.telemetry.record_fault(
                     tick, "readmitted", tenant=name,
-                    detail=f"after {waited} ticks, {p.retries + 1} tries")
+                    detail=f"after {waited} ticks, {p.retries + 1} tries",
+                    shard=self.rt.ctrl.shard_of(name))
                 self.rt._events[name] = "readmitted"
                 self.rt._grace_until[name] = tick + self.rt.cfg.slo_grace_ticks
                 self.rt._force_rescale.add(name)
@@ -288,6 +312,16 @@ class RecoveryManager:
         level = max(self.cfg.brownout_floor,
                     1.0 - parked_c / max(total_c, 1e-9))
         gov.set_brownout(level)
+
+    def notify_capacity(self, tick: int) -> None:
+        """Capacity returned to the pool (a NIC revived): retry every parked
+        tenant on the next tick instead of waiting out the blind timer. The
+        backoff state is kept — if the retry still fails, the exponential
+        schedule resumes where it left off. Pure timer backoff made
+        re-admission miss repair waves entirely: a retry that fired just
+        before the revive pushed the next attempt a doubled backoff past it."""
+        for p in self.parked.values():
+            p.next_retry = min(p.next_retry, tick + 1)
 
     def mean_time_to_recover(self) -> Optional[float]:
         """Mean ticks parked across all re-admissions (None if none yet)."""
@@ -367,7 +401,15 @@ class ChaosEngine:
                     tick + max(1, ev.duration_ticks), []).append(
                         FaultEvent(tick=tick, kind=REVIVE, nic=nic))
         elif ev.kind == REVIVE:
-            members = pool.rack_members(ev.rack) if ev.rack else [ev.nic]
+            # nic targets one member, rack a whole domain; neither = a full
+            # repair wave — every NIC still down (crash victims included,
+            # whichever the trajectory picked) is replaced.
+            if ev.rack:
+                members = pool.rack_members(ev.rack)
+            elif ev.nic:
+                members = [ev.nic]
+            else:
+                members = [n for n in pool.nics if not pool[n].alive]
             for n in members:
                 pool.revive(n)
                 rt.note_revive(n)
@@ -377,12 +419,16 @@ class ChaosEngine:
             # throughput, never by reading the pool's gray factor.
             pool.mark_gray(ev.nic, ev.fraction)
             rt.telemetry.record_fault(tick, GRAY, nic=ev.nic,
-                                      detail=f"frac={ev.fraction:g}")
+                                      detail=f"frac={ev.fraction:g}",
+                                      shard=rt.ctrl.shard_of_nic(ev.nic))
         elif ev.kind == RACK:
             for n in pool.rack_members(ev.rack):
                 if pool[n].alive:
                     self._crash(tick, n, note=False)
-            rt.telemetry.record_fault(tick, RACK, nic=ev.rack)
+            members = pool.rack_members(ev.rack)
+            rt.telemetry.record_fault(
+                tick, RACK, nic=ev.rack,
+                shard=rt.ctrl.shard_of_nic(members[0]) if members else None)
         elif ev.kind == MID_MIGRATION:
             self._mid_migration(tick)
         else:
@@ -395,7 +441,11 @@ class ChaosEngine:
                kind: str = CRASH) -> Optional[str]:
         failed, _ = self.rt.inject_failure(nic)
         if note and failed is not None:
-            self.rt.telemetry.record_fault(tick, kind, nic=failed)
+            # Failure domains map to shard ownership: the record carries
+            # the owning shard so the fault log localizes by rack.
+            self.rt.telemetry.record_fault(
+                tick, kind, nic=failed,
+                shard=self.rt.ctrl.shard_of_nic(failed))
         return failed
 
     def _mid_migration(self, tick: int) -> None:
@@ -410,7 +460,8 @@ class ChaosEngine:
             nics = sorted(dep.nics_used())
             if nics:
                 rt.telemetry.record_fault(tick, MID_MIGRATION, nic=nics[0],
-                                          tenant=dep.tenant)
+                                          tenant=dep.tenant,
+                                          shard=rt.ctrl.shard_of_nic(nics[0]))
                 rt.inject_failure(nics[0])
 
         rt.ctrl.mid_migration_hook = on_swap

@@ -131,6 +131,16 @@ class ResourceGovernor:
         # governor issues lands in the decision-audit trace with its reason
         # and the ledger state that produced it. None = silent (no-op).
         self.obs = None
+        # Shard attribution (ISSUE 8): a sharded controller installs a
+        # resolver (tenant -> shard name) so every verdict this governor
+        # audits or counts carries the owning shard's label. None = the
+        # legacy single-controller layout (no label, traces unchanged).
+        self.shard_resolver = None
+        # Vectorized scheduling kernel (ISSUE 8): when attached, the DWRR
+        # dispatch runs as one jitted array program over all tenants
+        # (core.sched_kernel) instead of the scalar dict walk below — which
+        # stays as the pinned reference oracle.
+        self._kernel = None
         self.quotas: Dict[str, TenantQuota] = {}
         self.credits: Dict[str, float] = {}      # burst tokens (Gbps-ticks)
         self._pool: Optional[Pool] = None
@@ -154,9 +164,23 @@ class ResourceGovernor:
         """Attach the observability context verdicts are audited into."""
         self.obs = obs
 
+    def attach_kernel(self, kernel) -> None:
+        """Attach a ``sched_kernel.VectorizedScheduler``: subsequent
+        ``dwrr_schedule`` calls run the jitted array program (None
+        detaches, restoring the scalar reference path)."""
+        self._kernel = kernel
+
+    def _shard_of(self, tenant: Optional[str]) -> Optional[str]:
+        if tenant is None or self.shard_resolver is None:
+            return None
+        return self.shard_resolver(tenant)
+
     def _audit(self, name: str, tenant: Optional[str] = None,
                **detail) -> None:
         if self.obs is not None:
+            shard = self._shard_of(tenant)
+            if shard is not None:
+                detail.setdefault("shard", shard)
             self.obs.trace.event(name, tenant=tenant, **detail)
 
     def register(self, tenant: str, quota: Optional[TenantQuota] = None) -> None:
@@ -384,8 +408,12 @@ class ResourceGovernor:
                     burst_credit_left=self.credits.get(tenant, 0.0),
                     headroom=dict(self._headroom) if self._headroom else {})
         if self.obs is not None:
+            labels = {"tenant": tenant, "reason": reason}
+            shard = self._shard_of(tenant)
+            if shard is not None:
+                labels["shard"] = shard
             self.obs.metrics.counter("governor_scale_verdicts_total",
-                                     tenant=tenant, reason=reason).inc()
+                                     **labels).inc()
         return ScaleVerdict(target_gbps=granted, rescale=rescale,
                             pressure=pressure, granted_frac=frac,
                             burst_credit_spent=burn, brownout=browned,
@@ -424,11 +452,14 @@ class ResourceGovernor:
 
     # -- priority ordering (failover re-placement, scale grants) ---------------
     def priority_order(self, tenants: Iterable[str]) -> List[str]:
-        """Heaviest weight first, stable within a weight class. Used for
-        failover re-placement and for the order scale grants draw down the
-        per-tick headroom ledger: under scarcity the contracts the pool
-        values most are served first."""
-        return sorted(tenants, key=lambda t: -self.weight(t))
+        """Heaviest weight first; ties break by tenant NAME, not dict
+        insertion order (ISSUE 8 determinism fix: sharded and legacy
+        controllers iterate tenants in different orders, so any
+        registration-order dependence would make their decisions diverge).
+        Used for failover re-placement and for the order scale grants draw
+        down the per-tick headroom ledger: under scarcity the contracts
+        the pool values most are served first."""
+        return sorted(tenants, key=lambda t: (-self.weight(t), t))
 
     failover_order = priority_order
 
@@ -475,15 +506,29 @@ class ResourceGovernor:
         Deficits persist across ticks; a tenant whose queue empties loses
         its deficit (classic DRR), so weights shape *long-run* service under
         saturation: weights 2:1:1 converge to ~2:1:1 served bytes.
+
+        With a kernel attached (``attach_kernel``) the whole tick runs as
+        one jitted array program over stacked tenant rows
+        (``core.sched_kernel``); this scalar body is the pinned reference
+        oracle the kernel is property-tested against.
         """
+        if self._kernel is not None:
+            return self._kernel.schedule(
+                queue_bytes, rate_caps, capacity_bytes,
+                weights={t: self.weight(t) for t in queue_bytes},
+                max_rounds=max_rounds)
         queues = {t: max(0.0, q) for t, q in queue_bytes.items()}
         caps = {t: (rate_caps.get(t, math.inf) if rate_caps else math.inf)
                 for t in queues}
-        # Ring maintenance: keep relative order, append arrivals, drop leavers.
+        # Ring maintenance: keep relative order, drop leavers, append
+        # arrivals in pinned priority order — weight descending then name
+        # (ISSUE 8 determinism fix: dict insertion order must not leak
+        # into who gets the head-of-ring edge).
         self._ring = [t for t in self._ring if t in queues]
-        for t in queues:
-            if t not in self._ring:
-                self._ring.append(t)
+        in_ring = set(self._ring)
+        for t in sorted((t for t in queues if t not in in_ring),
+                        key=lambda t: (-self.weight(t), t)):
+            self._ring.append(t)
 
         if capacity_bytes is None:
             # Uncapped shared link: no contention to arbitrate — every queue
@@ -529,7 +574,10 @@ class ResourceGovernor:
             # Rotate so arrival order confers no standing head-of-line edge.
             if self._ring:
                 self._ring.append(self._ring.pop(0))
-        for t in queues:
-            if t not in order:
-                order.append(t)
+        # Unserved tenants trail in pinned priority order (same determinism
+        # fix as the ring: no dict-order dependence in the dispatch order).
+        seen = set(order)
+        for t in sorted((t for t in queues if t not in seen),
+                        key=lambda t: (-self.weight(t), t)):
+            order.append(t)
         return order, served

@@ -1,0 +1,402 @@
+"""Vectorized per-tick scheduling kernel: tenants as rows of stacked arrays.
+
+The scalar control path (``ResourceGovernor.dwrr_schedule``, the runtime's
+backlog math, ``TelemetryLog``'s per-tenant reduction) walks a Python dict
+per tenant per tick — fine at 6 tenants, a wall at the 1000-tenant /
+500-NIC scale the ROADMAP targets. Following *Wave* (offload the resource-
+management fast path to the device), this module re-expresses the per-tick
+fast path as a dense array program over ALL tenants at once:
+
+  ``dwrr_step``          one jitted deficit-weighted round-robin tick. The
+                         scalar reference serves tenants sequentially within
+                         a round; the kernel exploits that within one round
+                         the budget consumed before visit position *i* is
+                         ``cumsum(desired)[:i]`` — so each round is one
+                         vectorized expression and the round loop is a
+                         ``lax.while_loop`` with no per-tenant host work.
+  ``dwrr_uncapped``      the order-only mode (``ingress_gbps=None``): every
+                         queue drains to its own cap, DWRR only ranks.
+  ``refill_credits``     burst token-bucket refill, all buckets at once.
+  ``queue_drain``        the backlog/queue-drain math from
+                         ``measure_tenant_tick`` (arrivals, served, carry).
+  ``scale_decisions``    the quota/pressure/brownout clamps of
+                         ``scale_verdict`` as a dense program: the fast path
+                         computes every tenant's grant and flags the sparse
+                         set that needs a host-side rescale.
+  ``telemetry_accumulate``  running per-tenant sums/maxes — the
+                         ``TelemetryLog`` reduction as one fused update.
+
+Array layout: one row per tenant, rows pinned in the governor's
+deterministic priority order (weight descending, then name — the ISSUE-8
+tie-break), padded to the next power of two so churn does not recompile.
+Deficits live *in the kernel state* (device-side on an accelerator host):
+they persist across ticks and are only materialized to the host for the
+audit trace, never in the hot loop.
+
+A note on Pallas: this host is CPU-only (``jax.devices() == [CpuDevice]``),
+where a hand-written Pallas kernel runs in interpret mode and *loses* to
+XLA's fused loop emission for these (N,)-shaped programs. The kernels here
+are plain jitted lax programs — the array layout is already the one a
+Pallas TPU kernel would take (rows × pow2 lanes), so the port is a
+backend swap, not a redesign.
+
+The scalar path in ``core/qos.py`` stays the pinned reference oracle:
+``tests/test_sched_kernel.py`` property-tests every kernel against it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Must match core.qos._EPS: the kernels replicate the scalar oracle's
+# epsilon decisions (take > eps, budget > eps, runnable checks) exactly.
+_EPS = 1e-9
+
+# Kernel (re)trace counter: incremented at TRACE time only (the Python body
+# of a jitted function runs once per compilation), so steady-state ticks
+# leave it untouched — the tier-1 smoke asserts exactly that.
+_TRACE_COUNTS: Dict[str, int] = {}
+
+
+def _count_trace(name: str) -> None:
+    _TRACE_COUNTS[name] = _TRACE_COUNTS.get(name, 0) + 1
+
+
+def trace_counts() -> Dict[str, int]:
+    """Compilations per kernel since ``reset_trace_counts`` (steady state
+    must not grow these)."""
+    return dict(_TRACE_COUNTS)
+
+
+def reset_trace_counts() -> None:
+    _TRACE_COUNTS.clear()
+
+
+def pad_rows(n: int, minimum: int = 8) -> int:
+    """Pow-2 row bucketing: tenant churn re-pads instead of re-tracing."""
+    size = minimum
+    while size < n:
+        size *= 2
+    return size
+
+
+# -- DWRR ----------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("max_rounds",))
+def dwrr_step(queues: jnp.ndarray, weights: jnp.ndarray,
+              deficits: jnp.ndarray, caps: jnp.ndarray, mask: jnp.ndarray,
+              budget: jnp.ndarray, ring_offset: jnp.ndarray,
+              max_rounds: int = 1024):
+    """One capped DWRR tick over stacked tenant rows.
+
+    Mirrors the scalar ``ResourceGovernor.dwrr_schedule`` capped branch:
+    per round, visit rows in ring order (base order rolled by
+    ``ring_offset + round``); runnable rows earn ``quantum * weight`` of
+    deficit and take ``min(queue, deficit, cap - served, budget_left)``;
+    idle rows forfeit their deficit; the round loop stops when the budget
+    or the runnable set is exhausted. Within a round the sequential budget
+    is vectorized via the cumulative-desired identity (see module doc).
+
+    Returns ``(served, new_deficits, stamps, rounds)`` where ``stamps[i]``
+    is the global visit position of row *i*'s first non-zero take (-1 =
+    never served) — the host derives the dispatch order from it.
+    """
+    _count_trace("dwrr_step")
+    n = queues.shape[0]
+    idx = jnp.arange(n)
+    active0 = mask > 0.0
+    total_w = jnp.sum(jnp.where(active0, weights, 0.0))
+    total_w = jnp.where(total_w > 0.0, total_w, 1.0)
+    budget0 = jnp.maximum(0.0, budget)
+    quantum = budget0 / (8.0 * total_w + 1e-9)
+
+    # The ring permutation is a pure cyclic shift, so the loop runs in the
+    # rotating *ring frame*: every carry array is pre-rolled so that the
+    # current round's visit order is plain index order, and each round ends
+    # with a roll-by-one (two contiguous slices — no gather/scatter with
+    # arbitrary indices, which is what would make each round O(n) strided).
+    def ring(x):
+        return jnp.roll(x, -ring_offset)
+
+    def cond(carry):
+        q, served, d, w, c, m, stamps, b, r = carry
+        runnable_any = jnp.any(m & (q > _EPS) & (served < c - _EPS))
+        return (r < max_rounds) & (b > _EPS) & runnable_any
+
+    def body(carry):
+        q, served, d, w, c, m, stamps, b, r = carry
+        runnable = m & (q > _EPS) & (served < c - _EPS)
+        d_inc = jnp.where(runnable, d + quantum * w, d)
+        desired = jnp.where(
+            runnable,
+            jnp.minimum(jnp.minimum(q, d_inc), c - served), 0.0)
+        prev = jnp.concatenate(
+            [jnp.zeros((1,), desired.dtype), jnp.cumsum(desired)[:-1]])
+        # Sequential-budget identity: rows before the truncation point take
+        # their full desired, the truncated row takes the remainder, rows
+        # after take nothing — exactly the scalar walk's outcome.
+        take = jnp.clip(b - prev, 0.0, desired)
+        take = jnp.where(take > _EPS, take, 0.0)
+        # The scalar walk breaks AFTER the row that exhausts the budget:
+        # later rows are unvisited (no deficit earn, no idle forfeit).
+        visited = (b - prev) > _EPS
+        d_new = jnp.where(visited & runnable, d_inc - take,
+                          jnp.where(visited & ~runnable & m, 0.0, d))
+        stamps = jnp.where((take > _EPS) & (stamps < 0),
+                           r * n + idx, stamps)
+        roll1 = lambda x: jnp.roll(x, -1)  # noqa: E731 — next round's frame
+        return (roll1(q - take), roll1(served + take), roll1(d_new),
+                roll1(w), roll1(c), roll1(m), roll1(stamps),
+                b - jnp.sum(take), r + 1)
+
+    init = (ring(jnp.maximum(queues, 0.0)), ring(jnp.zeros_like(queues)),
+            ring(deficits), ring(weights), ring(caps), ring(active0),
+            ring(jnp.full((n,), -1, dtype=jnp.int32)),
+            budget0, jnp.zeros((), dtype=jnp.int32))
+    out = jax.lax.while_loop(cond, body, init)
+    _, served, deficits, _, _, _, stamps, _, rounds = out
+    # After R rounds the frame is shifted by ring_offset + R: undo once.
+    unroll = ring_offset + rounds
+    served = jnp.roll(served, unroll)
+    deficits = jnp.roll(deficits, unroll)
+    stamps = jnp.roll(stamps, unroll)
+    return served, deficits, stamps, rounds
+
+
+@jax.jit
+def dwrr_uncapped(queues: jnp.ndarray, weights: jnp.ndarray,
+                  caps: jnp.ndarray, mask: jnp.ndarray):
+    """Order-only mode (``capacity_bytes=None``): each queue drains to its
+    own cap; the returned key ranks dispatch most-owed-first (weighted
+    backlog descending — the scalar path's exact sort key)."""
+    _count_trace("dwrr_uncapped")
+    q = jnp.maximum(queues, 0.0)
+    served = jnp.where(mask > 0.0, jnp.minimum(q, caps), 0.0)
+    return served, q * weights
+
+
+# -- burst buckets / backlog ---------------------------------------------------
+
+@jax.jit
+def refill_credits(credits: jnp.ndarray, depth: jnp.ndarray,
+                   refill: jnp.ndarray) -> jnp.ndarray:
+    """Token-bucket refill for every tenant at once (scalar reference:
+    the ``begin_tick`` credit loop)."""
+    _count_trace("refill_credits")
+    out = jnp.minimum(depth, credits + refill)
+    return jnp.where(depth > 0.0, out, credits)
+
+
+@jax.jit
+def queue_drain(offered_pps: jnp.ndarray, backlog_pkts: jnp.ndarray,
+                cap_pps: jnp.ndarray, served_pkts: jnp.ndarray,
+                dt_s: jnp.ndarray):
+    """The backlog/queue-drain math of ``measure_tenant_tick`` (arrivals,
+    service, carried backlog, achieved pps), all tenants at once."""
+    _count_trace("queue_drain")
+    arriving = jnp.maximum(offered_pps, 0.0) * dt_s \
+        + jnp.maximum(backlog_pkts, 0.0)
+    served = jnp.minimum(arriving, jnp.maximum(cap_pps, 0.0) * dt_s)
+    served = jnp.minimum(served, jnp.maximum(served_pkts, 0.0))
+    new_backlog = arriving - served
+    achieved_pps = jnp.where(dt_s > 0.0, served / dt_s, 0.0)
+    return served, new_backlog, achieved_pps
+
+
+# -- governor fast path --------------------------------------------------------
+
+@jax.jit
+def scale_decisions(est_gbps: jnp.ndarray, offered_gbps: jnp.ndarray,
+                    contract_gbps: jnp.ndarray, current_gbps: jnp.ndarray,
+                    achievable_gbps: jnp.ndarray, quota_gbps: jnp.ndarray,
+                    credits: jnp.ndarray, weights: jnp.ndarray,
+                    brownout: jnp.ndarray, wmax: jnp.ndarray,
+                    headroom: jnp.ndarray, floor_frac: jnp.ndarray,
+                    pressure_frac: jnp.ndarray,
+                    rescale_threshold: jnp.ndarray):
+    """The Gbps clamps of ``ResourceGovernor.scale_verdict`` as one dense
+    program: desired/pressure/quota+burst/brownout, then the rescale flag.
+
+    ``quota_gbps`` uses +inf for "uncapped"; ``brownout`` is the base level
+    (>= 1.0 means off). Unit/headroom-ledger accounting stays host-side:
+    the flagged rows are the sparse set the host walks — the whole point of
+    the split (O(tenants) device work, O(rescales) host work).
+    """
+    _count_trace("scale_decisions")
+    desired = jnp.maximum(floor_frac * contract_gbps, est_gbps * headroom)
+    pressure = offered_gbps > pressure_frac * jnp.maximum(achievable_gbps,
+                                                          1e-9)
+    desired = jnp.where(pressure,
+                        jnp.maximum(desired, offered_gbps * headroom),
+                        desired)
+    over = jnp.maximum(0.0, desired - quota_gbps)
+    burn = jnp.minimum(over, jnp.maximum(credits, 0.0))
+    cap = jnp.where(jnp.isfinite(quota_gbps), quota_gbps + burn, desired)
+    granted = jnp.minimum(desired, cap)
+    # Brownout: weight-proportional clamp toward b * contract; burst credit
+    # cannot buy out a brownout (burn zeroed on clamped rows).
+    bfac = brownout + (1.0 - brownout) * weights / jnp.maximum(wmax, 1e-9)
+    bfac = jnp.where(brownout >= 1.0, 1.0, bfac)
+    bcap = jnp.maximum(floor_frac * contract_gbps, bfac * contract_gbps)
+    browned = (bfac < 1.0) & (granted > bcap + _EPS)
+    granted = jnp.where(browned, bcap, granted)
+    burn = jnp.where(browned, 0.0, burn)
+    gap = jnp.abs(granted - current_gbps) / jnp.maximum(contract_gbps, 1e-9)
+    scaling_up = granted > current_gbps + 1e-9
+    rescale = (scaling_up & (pressure | (gap > rescale_threshold))) \
+        | (~scaling_up & (gap > rescale_threshold))
+    return granted, rescale, pressure, browned, burn
+
+
+@jax.jit
+def telemetry_accumulate(state, offered_gbps, achieved_gbps, backlog_pkts,
+                         units, mask):
+    """One fused update of the per-tenant running reduction the scalar
+    ``TelemetryLog.summary`` loop performs at end of run: counts, sums for
+    the means, maxes for the peaks."""
+    _count_trace("telemetry_accumulate")
+    count, s_off, s_ach, mx_back, s_units = state
+    m = mask
+    return (count + m,
+            s_off + offered_gbps * m,
+            s_ach + achieved_gbps * m,
+            jnp.maximum(mx_back, jnp.where(m > 0, backlog_pkts, -jnp.inf)),
+            s_units + units * m)
+
+
+def telemetry_state(n: int):
+    """Fresh accumulator state for ``telemetry_accumulate`` (n rows)."""
+    z = jnp.zeros((n,), dtype=jnp.float32)
+    return (z, z, z, jnp.full((n,), -jnp.inf, dtype=jnp.float32), z)
+
+
+# -- per-tenant reduction for TelemetryLog.summary (host-side, one-shot) -------
+
+def telemetry_reduce_np(idx: np.ndarray, n_tenants: int,
+                        means: Dict[str, np.ndarray],
+                        maxes: Dict[str, np.ndarray]
+                        ) -> Tuple[np.ndarray, Dict[str, np.ndarray],
+                                   Dict[str, np.ndarray]]:
+    """Segment-reduce per-record fields to per-tenant stats in one pass:
+    ``idx`` maps each record to its tenant row. Returns (counts, per-field
+    means, per-field maxes). Replaces the O(tenants x ticks) dict loops in
+    ``TelemetryLog.summary`` — called once per report, numpy is the right
+    backend (no reuse to amortize a device transfer against)."""
+    counts = np.bincount(idx, minlength=n_tenants).astype(float)
+    safe = np.maximum(counts, 1.0)
+    out_means = {k: np.bincount(idx, weights=np.asarray(v, dtype=float),
+                                minlength=n_tenants) / safe
+                 for k, v in means.items()}
+    out_maxes = {}
+    for k, v in maxes.items():
+        acc = np.full(n_tenants, -np.inf)
+        np.maximum.at(acc, idx, np.asarray(v, dtype=float))
+        out_maxes[k] = acc
+    return counts, out_means, out_maxes
+
+
+# -- dict-world adapter --------------------------------------------------------
+
+class VectorizedScheduler:
+    """Stateful adapter between the governor's dict world and the stacked-
+    array kernels. Owns the persistent kernel state: row mapping (pinned
+    priority order: weight descending, then name), deficits, the ring
+    offset, padded to pow-2 rows so churn re-pads instead of re-tracing.
+
+    ``schedule`` is a drop-in for the scalar ``dwrr_schedule`` body —
+    same (order, served) contract — used when the governor runs with an
+    attached kernel (``RuntimeConfig.vectorized_sched`` /
+    ``ResourceGovernor.attach_kernel``).
+    """
+
+    def __init__(self, max_rounds: int = 1024):
+        self.max_rounds = max_rounds
+        self.names: List[str] = []
+        self._row: Dict[str, int] = {}
+        self._padded = 0
+        self._weights = np.zeros(0, dtype=np.float32)
+        self._mask = np.zeros(0, dtype=np.float32)
+        self._deficits = jnp.zeros(0, dtype=jnp.float32)
+        self._ring_offset = 0
+
+    # -- membership ------------------------------------------------------------
+    def sync(self, weights: Dict[str, float]) -> None:
+        """(Re)build the row mapping when membership or weights changed.
+        Deficits carry over by name; leavers are dropped (the scalar path
+        forgets their deficit too)."""
+        names = sorted(weights, key=lambda t: (-weights[t], t))
+        if (names == self.names
+                and all(np.float32(weights[t]) == self._weights[self._row[t]]
+                        for t in names)):
+            return
+        old_def = {t: float(np.asarray(self._deficits)[self._row[t]])
+                   for t in self.names if t in weights}
+        self.names = names
+        self._row = {t: i for i, t in enumerate(names)}
+        self._padded = pad_rows(len(names))
+        self._weights = np.zeros(self._padded, dtype=np.float32)
+        self._mask = np.zeros(self._padded, dtype=np.float32)
+        for t, i in self._row.items():
+            self._weights[i] = weights[t]
+            self._mask[i] = 1.0
+        deficits = np.zeros(self._padded, dtype=np.float32)
+        for t, d in old_def.items():
+            deficits[self._row[t]] = d
+        self._deficits = jnp.asarray(deficits)
+        self._ring_offset = 0
+
+    def deficit(self, tenant: str) -> float:
+        """Host view of a device-resident deficit (audit/debug only)."""
+        i = self._row.get(tenant)
+        return float(np.asarray(self._deficits)[i]) if i is not None else 0.0
+
+    # -- the per-tick call -----------------------------------------------------
+    def schedule(self, queue_bytes: Dict[str, float],
+                 rate_caps: Optional[Dict[str, float]],
+                 capacity_bytes: Optional[float],
+                 weights: Dict[str, float],
+                 max_rounds: Optional[int] = None
+                 ) -> Tuple[List[str], Dict[str, float]]:
+        self.sync(weights)
+        n = self._padded
+        q = np.zeros(n, dtype=np.float32)
+        caps = np.full(n, np.inf, dtype=np.float32)
+        for t, v in queue_bytes.items():
+            i = self._row[t]
+            q[i] = max(0.0, v)
+            if rate_caps is not None and t in rate_caps:
+                caps[i] = rate_caps[t]
+
+        if capacity_bytes is None:
+            served_a, key = dwrr_uncapped(jnp.asarray(q), self._weights,
+                                          jnp.asarray(caps), self._mask)
+            served_np = np.asarray(served_a)
+            key_np = np.asarray(key)
+            order = sorted(queue_bytes,
+                           key=lambda t: (-float(key_np[self._row[t]]), t))
+            return order, {t: float(served_np[self._row[t]])
+                           for t in queue_bytes}
+
+        served_a, self._deficits, stamps, rounds = dwrr_step(
+            jnp.asarray(q), jnp.asarray(self._weights), self._deficits,
+            jnp.asarray(caps), jnp.asarray(self._mask),
+            jnp.float32(max(0.0, capacity_bytes)),
+            jnp.int32(self._ring_offset),
+            max_rounds=max_rounds or self.max_rounds)
+        self._ring_offset = (self._ring_offset + int(rounds)) % max(1, n)
+        served_np = np.asarray(served_a)
+        stamps_np = np.asarray(stamps)
+        stamped = [(int(stamps_np[self._row[t]]), t) for t in queue_bytes
+                   if stamps_np[self._row[t]] >= 0]
+        order = [t for _, t in sorted(stamped)]
+        seen = set(order)
+        # Unserved tenants trail in pinned priority order — the scalar
+        # path's post-fix fill with the ISSUE-8 deterministic tie-break.
+        order += [t for t in self.names if t in queue_bytes
+                  and t not in seen]
+        return order, {t: float(served_np[self._row[t]])
+                       for t in queue_bytes}

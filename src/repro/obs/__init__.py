@@ -17,8 +17,8 @@ from typing import Iterable, Optional
 from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
                                MetricsRegistry)
 from repro.obs.percentiles import P2Quantile, Reservoir    # noqa: F401
-from repro.obs.trace import (DECISION, FAULT, MARK, SPAN,  # noqa: F401
-                             DecisionTrace, Span, TraceEvent)
+from repro.obs.trace import (DECISION, FAULT, MARK, RECONCILE,  # noqa: F401
+                             SPAN, DecisionTrace, Span, TraceEvent)
 
 
 class Obs:

@@ -34,6 +34,13 @@ FAULT = "fault"            # injected fault / detector transition / recovery
 SPAN = "span"              # begin/end of a timed controller operation
 MARK = "mark"              # free-form annotation
 
+# Well-known span name (ISSUE 8): the sharded controller's cross-shard
+# headroom-digest refresh. ``trace.spans(name=RECONCILE)`` lists every
+# reconciliation with its staleness ages and refreshed digests, and a
+# ``cross_rack_placement`` decision between two reconcile spans is
+# explained by the digest staleness the spans bracket.
+RECONCILE = "reconcile"
+
 
 @dataclasses.dataclass
 class TraceEvent:

@@ -83,6 +83,11 @@ class RuntimeConfig:
     gray_min_ticks: int = 3           # consecutive evidence ticks before drain
     gray_min_load_frac: float = 0.5   # offered/achievable for a tick to count
                                       # as evidence (idle tenants prove nothing)
+    # Vectorized scheduling kernel (ISSUE 8): run the per-tick DWRR as one
+    # jitted array program over stacked tenant rows (core.sched_kernel)
+    # instead of the scalar dict walk. Default OFF: the scalar path is the
+    # pinned reference oracle the kernel is property-tested against.
+    vectorized_sched: bool = False
 
 
 class ServiceRuntime:
@@ -124,8 +129,14 @@ class ServiceRuntime:
         self.gray = (GrayFailureDetector(threshold=self.cfg.gray_threshold,
                                          min_ticks=self.cfg.gray_min_ticks)
                      if self.cfg.gray_detect else None)
+        # Sequential-probe bookkeeping: drained suspect -> the co-accused it
+        # was convicted alongside, for vindication (see _drain_suspects).
+        self._probe_history: Dict[str, List[str]] = {}
         if self.gray is not None:
             self.gray.trace = self.obs.trace
+        if self.cfg.vectorized_sched:
+            from repro.core.sched_kernel import VectorizedScheduler
+            controller.governor.attach_kernel(VectorizedScheduler())
         controller.add_hook(self._on_event)
 
     # -- controller feedback ---------------------------------------------------
@@ -217,7 +228,8 @@ class ServiceRuntime:
             # surfaced both per-tick (tenant event) and in the fault log.
             self._events.setdefault(tenant, "degraded")
             self.telemetry.record_fault(self.tick_now, "degraded",
-                                        tenant=tenant)
+                                        tenant=tenant,
+                                        shard=self.ctrl.shard_of(tenant))
         if verdict.rescale:
             self.ctrl.adaptive_scale(tenant, verdict.target_gbps)
             self._cooldown[tenant] = cfg.scale_cooldown_ticks
@@ -251,9 +263,13 @@ class ServiceRuntime:
 
     def note_revive(self, nic: str) -> None:
         """A repaired NIC returned to the pool: the gray detector forgets any
-        suspicion/probation so the NIC starts over with a clean record."""
+        suspicion/probation so the NIC starts over with a clean record, and
+        parked tenants get an immediate retry against the new capacity."""
         if self.gray is not None:
             self.gray.clear(nic)
+        self._probe_history.pop(nic, None)
+        if self.recovery is not None:
+            self.recovery.notify_capacity(self.tick_now)
 
     # -- gray-failure detection ------------------------------------------------
     def _drain_suspects(self, tick: int) -> None:
@@ -267,17 +283,50 @@ class ServiceRuntime:
         At most ONE quarantine per tick: when the only loaded observer of a
         sick NIC spans several NICs, its deviation convicts the whole
         placement identically — the evidence cannot localize. Drain the
-        worst suspect and acquit the co-accused; a genuinely sick survivor
-        re-convicts itself within ``min_ticks`` once service settles, while
-        a healthy one is exonerated as soon as its tenants recover."""
+        worst suspect and *acquit* the co-accused: their evidence is kept
+        but parked at its current streak, so a genuinely sick survivor
+        re-convicts itself on the first post-drain evidence tick (the
+        witness was re-placed off the drained NIC — deviation that persists
+        now points at the survivor alone), while a healthy one sees its
+        evidence stop and is exonerated as soon as its tenants recover."""
         suspects = self.gray.suspects()
         if not suspects:
             return
+
+        def at_stake(n: str) -> int:
+            # Units the pool currently has riding on the suspect. When
+            # suspicion is exactly tied (one witness convicting its whole
+            # placement), drain the most-loaded suspect first: with a flat
+            # prior over the tied suspects, expected damage removed by the
+            # drain scales with the load the NIC carries.
+            return sum(sum(row.values())
+                       for dep in self.ctrl.deployments.values()
+                       for m, row in dep.allocation.A.items() if m == n)
+
         for nic in [max(suspects,
-                        key=lambda n: (self.gray.suspicion.get(n, 0.0), n))]:
+                        key=lambda n: (self.gray.suspicion.get(n, 0.0),
+                                       at_stake(n), n))]:
             co_accused = [n for n in suspects if n != nic]
             for other in co_accused:
-                self.gray.clear(other)
+                self.gray.acquit(other)
+            # Vindication: this conviction came from evidence that persisted
+            # AFTER an earlier probe drained a co-suspect on the same
+            # testimony — the witness was re-placed and still deviates, so
+            # the earlier drain hit an innocent NIC. Give it back.
+            for prior, accused in list(self._probe_history.items()):
+                if nic in accused and not self.ctrl.pool[prior].alive:
+                    self.ctrl.pool.revive(prior)
+                    self.gray.clear(prior)
+                    del self._probe_history[prior]
+                    self.obs.trace.event("gray_vindicated", nic=prior,
+                                         convicted=nic)
+                    self.telemetry.record_fault(
+                        tick, "gray_vindicated", nic=prior,
+                        detail=f"evidence persisted, convicted {nic}",
+                        shard=self.ctrl.shard_of_nic(prior))
+                    self.recovery.notify_capacity(tick)
+            if co_accused:
+                self._probe_history[nic] = co_accused
             self.gray.probation.add(nic)
             # The quarantine verdict, with everything an operator needs to
             # audit it: why this NIC, on whose testimony, who was acquitted.
@@ -290,26 +339,35 @@ class ServiceRuntime:
                 streak=self.gray.streak.get(nic, 0),
                 observers=self.gray.observers.get(nic, []),
                 co_accused=co_accused)
-            self.telemetry.record_fault(tick, "gray_probation", nic=nic)
+            self.telemetry.record_fault(tick, "gray_probation", nic=nic,
+                                        shard=self.ctrl.shard_of_nic(nic))
             with self.obs.trace.span("gray_drain", nic=nic) as sp:
-                healthy = [n for n in self.ctrl.pool.names()
-                           if n != nic and n not in self.gray.probation]
+                # Drain targets route through the controller: a sharded
+                # facade prefers the sick NIC's shard-local healthy set
+                # (failure domain = shard), falling back pool-wide.
+                candidates = self.ctrl.drain_nic_candidates(
+                    nic, exclude=self.gray.probation)
                 victims = [name for name, dep in self.ctrl.deployments.items()
                            if nic in dep.nics_used()]
                 for name in victims:
-                    self.ctrl.migrate(name, only_nics=healthy, forced=True,
-                                      require_improvement=False)
+                    for healthy in candidates:
+                        if self.ctrl.migrate(
+                                name, only_nics=healthy, forced=True,
+                                require_improvement=False) is not None:
+                            break
                 still = [name for name, dep in self.ctrl.deployments.items()
                          if nic in dep.nics_used()]
                 if still:
                     self.inject_failure(nic)
                     self.telemetry.record_fault(tick, "gray_quarantined",
                                                 nic=nic,
-                                                detail="escalated to failover")
+                                                detail="escalated to failover",
+                                                shard=self.ctrl.shard_of_nic(nic))
                 else:
                     self.ctrl.pool.mark_failed(nic)
                     self.telemetry.record_fault(tick, "gray_quarantined",
-                                                nic=nic)
+                                                nic=nic,
+                                                shard=self.ctrl.shard_of_nic(nic))
                 sp.note(victims=victims, escalated=bool(still))
             self.recovery.sweep(tick)
 
@@ -341,6 +399,10 @@ class ServiceRuntime:
         for _ in range(num_ticks):
             tick = self.tick_now
             self.obs.set_tick(tick)
+            # Shard reconciliation (ISSUE 8): refresh headroom digests that
+            # reached the staleness bound BEFORE this tick's admissions
+            # consult them. No-op on the unsharded controller.
+            self.ctrl.reconcile(tick)
             self._churn(tick)
             if chaos is not None:
                 chaos.step(tick)
@@ -447,7 +509,14 @@ class ServiceRuntime:
                     loaded = (want > 0.1
                               and offered >= cfg.gray_min_load_frac
                               * max(dep.achievable_gbps, 1e-9))
-                    if loaded and not in_grace:
+                    # A tenant the shared-ingress DWRR budget starved this
+                    # tick cannot testify: its shortfall is the scheduler's
+                    # doing, not its NICs' — contention deviation would
+                    # frame every NIC in the placement at once.
+                    starved = (ingress is not None
+                               and served_bytes.get(tenant, 0.0) + 1.0
+                               < min(queues[tenant], rate_caps[tenant]))
+                    if loaded and not in_grace and not starved:
                         dev = max(0.0, 1.0 - achieved / want)
                         for n in tenant_nics:
                             blame.setdefault(n, []).append(dev)

@@ -63,6 +63,7 @@ class FaultRecord:
     nic: Optional[str] = None
     tenant: Optional[str] = None
     detail: str = ""
+    shard: Optional[str] = None  # owning failure domain (sharded controller)
 
 
 class TelemetryLog:
@@ -103,12 +104,15 @@ class TelemetryLog:
         self.cluster_ticks.append(c)
 
     def record_fault(self, tick: int, kind: str, nic: Optional[str] = None,
-                     tenant: Optional[str] = None, detail: str = "") -> None:
+                     tenant: Optional[str] = None, detail: str = "",
+                     shard: Optional[str] = None) -> None:
         self.fault_events.append(FaultRecord(tick=tick, kind=kind, nic=nic,
-                                             tenant=tenant, detail=detail))
+                                             tenant=tenant, detail=detail,
+                                             shard=shard))
         if self.trace is not None:
+            extra = {"shard": shard} if shard is not None else {}
             self.trace.event(kind, tenant=tenant, nic=nic, kind="fault",
-                             tick=tick, detail=detail)
+                             tick=tick, detail=detail, **extra)
 
     def faults(self, kind: Optional[str] = None) -> List[FaultRecord]:
         if kind is None:
@@ -155,7 +159,48 @@ class TelemetryLog:
     def summary(self, warmup_ticks: Optional[int] = None) -> Dict[str, dict]:
         """Per-tenant run statistics over post-warmup ticks (the same
         horizon ``slo_report`` uses, so the two reports describe the same
-        window by default)."""
+        window by default).
+
+        One segment-reduction pass over stacked record arrays
+        (``sched_kernel.telemetry_reduce_np``) instead of the per-tenant
+        dict loops — O(records) regardless of tenant count. The old loop
+        survives as ``summary_scalar``, the pinned reference oracle."""
+        from repro.core.sched_kernel import telemetry_reduce_np
+        warmup = self._warmup(warmup_ticks)
+        recs = [t for t in self.tenant_ticks if t.tick >= warmup]
+        if not recs:
+            return {}
+        names = sorted({t.tenant for t in recs})
+        row = {t: i for i, t in enumerate(names)}
+        idx = np.fromiter((row[t.tenant] for t in recs), dtype=np.int64,
+                          count=len(recs))
+        counts, means, maxes = telemetry_reduce_np(
+            idx, len(names),
+            means={
+                "offered_gbps_mean": [t.offered_gbps for t in recs],
+                "achieved_gbps_mean": [t.achieved_gbps for t in recs],
+                "units_mean": [t.units for t in recs],
+                "hop_pairs_mean": [t.hop_pairs for t in recs],
+                "nics_used_mean": [t.nics_used for t in recs],
+            },
+            maxes={
+                "p99_s_max": [t.p99_s for t in recs],
+                "p99_measured_s_max": [t.p99_measured_s for t in recs],
+            })
+        out: Dict[str, dict] = {}
+        for tenant, i in row.items():
+            if counts[i] <= 0:
+                continue
+            rec = {"ticks": int(counts[i])}
+            rec.update({k: float(v[i]) for k, v in means.items()})
+            rec.update({k: float(v[i]) for k, v in maxes.items()})
+            out[tenant] = rec
+        return {t: out[t] for t in sorted(out)}
+
+    def summary_scalar(self, warmup_ticks: Optional[int] = None
+                       ) -> Dict[str, dict]:
+        """The original per-tenant dict-loop reduction, kept as the pinned
+        reference oracle for the vectorized ``summary`` above."""
         warmup = self._warmup(warmup_ticks)
         out: Dict[str, dict] = {}
         for tenant in sorted(self._grouped()):

@@ -220,9 +220,38 @@ def test_failover_order_is_weight_descending_stable():
     gov.register("hi", TenantQuota(weight=3.0))
     gov.register("lo2", TenantQuota(weight=1.0))
     assert gov.failover_order(["lo1", "hi", "lo2"]) == ["hi", "lo1", "lo2"]
-    # disabled -> insertion order (no priority policy)
+    # disabled -> every tenant weighs 1.0, so the (weight, name) tie-break
+    # pins name order regardless of how the list was handed in
     assert ResourceGovernor(enabled=False).failover_order(
-        ["lo1", "hi", "lo2"]) == ["lo1", "hi", "lo2"]
+        ["lo1", "hi", "lo2"]) == ["hi", "lo1", "lo2"]
+
+
+def test_ordering_is_invariant_to_registration_order():
+    """Determinism fix (ISSUE 8): priority_order and dwrr_schedule tie-break
+    by (weight, name), never by dict insertion order — any registration
+    shuffle of the same quotas yields byte-identical decisions."""
+    import random
+
+    quotas = {f"t{i:02d}": TenantQuota(weight=float(1 + i % 3))
+              for i in range(12)}
+    queues = {t: 1000.0 * (1 + i % 5) for i, t in enumerate(quotas)}
+    caps = {t: 4000.0 for t in quotas}
+    baseline = None
+    rng = random.Random(8)
+    for trial in range(6):
+        names = list(quotas)
+        rng.shuffle(names)
+        gov = ResourceGovernor()
+        for t in names:
+            gov.register(t, quotas[t])
+        order, served = gov.dwrr_schedule(dict(queues), dict(caps),
+                                          capacity_bytes=9000.0)
+        got = (gov.priority_order(list(quotas)), order,
+               sorted(served.items()))
+        if baseline is None:
+            baseline = got
+        else:
+            assert got == baseline, f"shuffle {trial} diverged"
 
 
 # -- flash-crowd isolation ----------------------------------------------------
