@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-slow bench bench-obs bench-dataplane bench-service bench-defrag bench-qos bench-chaos bench-control check-bench
+.PHONY: test test-slow bench bench-obs bench-dataplane bench-megaflow bench-service bench-defrag bench-qos bench-chaos bench-control check-bench
 
 # Tier-1 suite. pytest.ini excludes `slow` tests by default (the small
 # dry-run compiles a full train step and can take minutes), so this can
@@ -31,6 +31,13 @@ bench-obs:
 # Just the fused data-plane grid; writes BENCH_dataplane.json.
 bench-dataplane:
 	python -m benchmarks.bench_dataplane
+
+# Megaflow fast path A/B (ISSUE 9): flow cache on vs slow-path-only
+# classification at 10^4..10^5 concurrent churning flows; merges the
+# `megaflow` record into BENCH_dataplane.json. Gated by `make check-bench`
+# (classification speedup >= 5x, hit-rate >= 0.95, zero steady recompiles).
+bench-megaflow:
+	python -m benchmarks.bench_megaflow
 
 # Meili-Serve deployment-mode comparison; writes BENCH_service.json.
 # (`--fast` variant is exercised inside `make test` as a smoke check.)

@@ -97,6 +97,10 @@ def main() -> None:
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "rows": results,
     }
+    if out.exists():                 # bench_megaflow shares this file
+        prev = json.loads(out.read_text())
+        if "megaflow" in prev:
+            payload["megaflow"] = prev["megaflow"]
     out.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"# wrote {out}")
 

@@ -7,7 +7,10 @@ Checked, each within the tolerance declared in ``bench_baseline.json``:
   * the chaos A/B's SLO-tick counts (and that recovery-on still dominates);
   * the control-plane A/B's flat-cost bar (ISSUE 8): the sharded+vectorized
     arm's per-tick cost growth from 100 to 1000 tenants stays <=
-    ``control_flatness_max``, with zero steady-state kernel recompiles.
+    ``control_flatness_max``, with zero steady-state kernel recompiles;
+  * the megaflow flow-cache bars (ISSUE 9, record in BENCH_dataplane.json):
+    classification speedup, end-to-end speedup, steady-state hit-rate,
+    zero fallbacks and zero steady-state recompiles at 10^5 flows.
 
 Fast-mode records are skipped per check: ``--fast``/partial runs use fewer
 ticks, so their numbers are not comparable to the recorded full-mode
@@ -111,6 +114,47 @@ def check(bench: dict, baseline: dict, emit=print) -> bool:
             emit(f"check-bench: {'ok  ' if good else 'FAIL'} control "
                  f"steady-state recompiles = {rec}")
             ok = ok and good
+
+    # Megaflow flow cache (ISSUE 9): at the gating flow count the cache-on
+    # arm must beat the slow classification path >= megaflow_min_speedup x
+    # (and the whole process() call >= megaflow_min_speedup_e2e x), with a
+    # steady-state packet hit-rate >= megaflow_min_hit_rate, zero fallbacks
+    # and zero steady-state recompiles. The record rides in
+    # BENCH_dataplane.json (merged in by main()); fast-mode records skip.
+    mega = bench.get("megaflow")
+    bar = baseline.get("megaflow_min_speedup")
+    if mega is None or bar is None:
+        emit("check-bench: no megaflow record, skipped")
+    elif mega.get("fast"):
+        emit("check-bench: fast-mode megaflow record not comparable, skipped")
+    else:
+        gate_flows = baseline.get("megaflow_gate_flows", 100_000)
+        rows = [r for r in mega.get("rows", []) if r.get("flows") == gate_flows]
+        if not rows:
+            emit(f"check-bench: FAIL megaflow row for {gate_flows} flows "
+                 "missing")
+            ok = False
+        for r in rows:
+            checks = [
+                ("speedup", r.get("speedup"), bar, "ge"),
+                ("speedup_e2e", r.get("speedup_e2e"),
+                 baseline.get("megaflow_min_speedup_e2e", 2.0), "ge"),
+                ("hit_rate_pkts", r.get("hit_rate_pkts"),
+                 baseline.get("megaflow_min_hit_rate", 0.95), "ge"),
+                ("fallbacks", r.get("fallbacks"), 0, "eq"),
+                ("steady_state_recompiles",
+                 r.get("steady_state_recompiles"), 0, "eq"),
+            ]
+            for name, cur, want, op in checks:
+                if cur is None:
+                    emit(f"check-bench: FAIL megaflow {name} missing")
+                    ok = False
+                    continue
+                good = (cur >= want) if op == "ge" else (cur == want)
+                rel = ">=" if op == "ge" else "=="
+                emit(f"check-bench: {'ok  ' if good else 'FAIL'} megaflow "
+                     f"{name} {cur:.3f} (want {rel} {want})")
+                ok = ok and good
     return ok
 
 
@@ -122,6 +166,9 @@ def main(argv=None) -> None:
         print(f"check-bench: {path.name} not found, nothing to gate (ok)")
         return
     bench = json.loads(path.read_text())
+    dp_path = ROOT / "BENCH_dataplane.json"
+    if "megaflow" not in bench and dp_path.exists():
+        bench["megaflow"] = json.loads(dp_path.read_text()).get("megaflow")
     baseline = json.loads(BASELINE.read_text())
     if not check(bench, baseline):
         raise SystemExit("check-bench: headline numbers regressed "

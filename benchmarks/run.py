@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows. Mapping:
   bench_state        -> Fig 20 + App. C (state engine ops)
   bench_kernels      -> kernel hot-spots (µs/call + TPU roofline context)
   bench_dataplane    -> fused data-plane pps (ISSUE 1; writes BENCH_dataplane.json)
+  bench_megaflow     -> megaflow flow cache on/off at 10^4..10^5 flows (ISSUE 9)
   bench_service      -> Meili-Serve efficiency modes + defrag A/B (ISSUE 2/3)
                         + QoS flash-crowd isolation A/B and adversarial-churn
                         records (ISSUE 4) + chaos fault-injection A/B with
@@ -30,8 +31,8 @@ import traceback
 
 from benchmarks import (bench_adaptive, bench_bandwidth, bench_control,
                         bench_dataplane, bench_efficiency, bench_kernels,
-                        bench_pipeline, bench_redirection, bench_scalability,
-                        bench_service, bench_state)
+                        bench_megaflow, bench_pipeline, bench_redirection,
+                        bench_scalability, bench_service, bench_state)
 from repro.obs.runlog import RunLogger
 
 ALL = [
@@ -44,6 +45,7 @@ ALL = [
     ("fig20", bench_state),
     ("kernels", bench_kernels),
     ("dataplane", bench_dataplane),
+    ("megaflow", bench_megaflow),
     ("service", bench_service),
     ("control", bench_control),
 ]

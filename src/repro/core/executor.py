@@ -130,7 +130,9 @@ class ParallelDataPlane:
                  latencies: Optional[Dict[str, float]] = None,
                  capacity_per_pipeline: float = 256.0,
                  ring_capacity: int = 4096,
-                 metrics=None, profile: bool = False):
+                 metrics=None, profile: bool = False,
+                 flow_cache: bool = True, flow_cache_config=None,
+                 table_cap: Optional[int] = None, trace=None):
         if num_pipelines is None:
             if R is None:
                 assert latencies is not None, "need num_pipelines, R or latencies"
@@ -138,7 +140,18 @@ class ParallelDataPlane:
             num_pipelines = repl.num_pipelines(R)
         self.app = app
         self.R = R
-        self.to = TrafficOrchestrator(num_pipelines, capacity_per_pipeline)
+        # Megaflow fast path (ISSUE 9): classification served from the
+        # device-resident exact-match cache; the TO's slow loop runs only on
+        # misses. `flow_cache=False` restores the pure slow path (the bench
+        # baseline arm); semantics are byte-identical either way.
+        fc = None
+        if flow_cache:
+            from repro.core.flowcache import FlowCache, FlowCacheConfig
+            fc = FlowCache(flow_cache_config or FlowCacheConfig())
+        self.to = TrafficOrchestrator(num_pipelines, capacity_per_pipeline,
+                                      flow_cache=fc, table_cap=table_cap,
+                                      trace=trace)
+        self._cache_metric_base: Dict[str, int] = {}
         self.pipelines = [PipelineRunner(app) for _ in range(num_pipelines)]
         self.ring_capacity = ring_capacity
         self._dispatch = _dispatch_program(app)
@@ -201,10 +214,34 @@ class ParallelDataPlane:
             self._rings = make_rings(proto, self._ring_cap, lanes)
             self._ring_proto_key = proto_key
 
+    def _sync_cache_metrics(self) -> None:
+        """Publish flow-cache counter deltas into the metrics registry
+        (counters only go up, so we ship increments from a local base)."""
+        fc = self.to.flow_cache
+        if fc is None or self.metrics is None:
+            return
+        snap = {"hits": fc.stats["hits"], "misses": fc.stats["misses"],
+                "evictions": fc.stats["evictions"],
+                "invalidations": fc.stats["invalidations"]}
+        for k, v in snap.items():
+            d = v - self._cache_metric_base.get(k, 0)
+            if d > 0:
+                self.metrics.counter(f"flow_cache_{k}_total",
+                                     app=self.app.name).inc(d)
+        self._cache_metric_base = snap
+
+    def flow_cache_stats(self) -> Dict[str, Any]:
+        """Fast-path counters for bench records: TO batch classification
+        plus the cache's own stats (empty dict when the cache is off)."""
+        fc = self.to.flow_cache
+        if fc is None:
+            return {}
+        return dict(self.to.fast_stats, **fc.stats_snapshot())
+
     # -- partition -> fused dispatch -> aggregate ------------------------------
     def process(self, batch: PacketBatch,
                 tenant: Optional[str] = None) -> PacketBatch:
-        assign = self.to.partition_assign(batch)
+        assign = self.to.partition_assign(batch, tenant=tenant)
         proc = np.nonzero(assign >= 0)[0]      # halted-flow packets buffered
         self._tag_tenant(tenant, proc.size)
         if proc.size == 0:
@@ -215,8 +252,11 @@ class ParallelDataPlane:
         M = _bucket(int(counts.max()))
 
         # Host-side index algebra (numpy, O(B)): lane slot per packet and the
-        # egress gather index that undoes the lane layout.
-        order = np.argsort(lanes_of, kind="stable")
+        # egress gather index that undoes the lane layout. Lane ids take only
+        # N values, so a counting sort (one flatnonzero pass per lane) beats
+        # a comparison argsort and is equally stable.
+        order = np.concatenate(
+            [np.flatnonzero(lanes_of == i) for i in range(N)])
         starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
         lanes_sorted = lanes_of[order]
         ranks = np.arange(proc.size) - starts[lanes_sorted]
@@ -280,6 +320,7 @@ class ParallelDataPlane:
                 self.metrics.histogram("dataplane_dispatch_us",
                                        app=self.app.name).observe(us)
         if self.metrics is not None:
+            self._sync_cache_metrics()
             self.metrics.counter("dataplane_dispatch_calls_total",
                                  app=self.app.name).inc()
             if self.dispatch_stats["compiles"] > 0:

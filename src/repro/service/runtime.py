@@ -185,7 +185,8 @@ class ServiceRuntime:
             cap = self.ctrl._pipeline_capacity(dep.profile, dep.num_pipelines)
             dp = ParallelDataPlane(dep.app, num_pipelines=dep.num_pipelines,
                                    capacity_per_pipeline=cap,
-                                   metrics=self.obs.metrics)
+                                   metrics=self.obs.metrics,
+                                   trace=self.obs.trace)
             self._planes[tenant] = dp
         return dp
 

@@ -46,12 +46,15 @@ class TrafficSpec:
     num_flows: int = 24
     tail_alpha: float = 1.3       # Pareto shape (smaller = heavier tail)
     surge_frac: float = 1.0       # flash: on-window multiplier over peak
+    flow_churn_per_tick: int = 0  # megaflow: flow-id window slide per tick
 
 
 class ScenarioWorkload:
-    def __init__(self, specs: Dict[str, TrafficSpec], seed: int = 0):
+    def __init__(self, specs: Dict[str, TrafficSpec], seed: int = 0,
+                 flow_base_stride: int = FLOW_BASE_STRIDE):
         self.specs = dict(specs)
         self.seed = seed
+        self.flow_base_stride = flow_base_stride
         self._idx = {t: i for i, t in enumerate(self.specs)}
         self._weights = {
             t: pareto_flow_weights(sp.num_flows, sp.tail_alpha,
@@ -95,10 +98,15 @@ class ScenarioWorkload:
         if offered <= 0.0 or sp.peak_gbps <= 0.0:
             return None
         n = max(8, int(round(max_pkts * offered / sp.peak_gbps)))
+        # Megaflow churn: slide the flow-id window by flow_churn_per_tick
+        # ids per tick — each tick retires that many old flows and births
+        # that many new ones (short-lived-flow turnover; the Pareto weight
+        # profile is stationary relative to the window).
+        drift = sp.flow_churn_per_tick * tick
         return synth_packets_weighted(
             batch=n, num_flows=sp.num_flows, weights=self._weights[tenant],
             seed=(self.seed, self._idx[tenant], tick), pkt_bytes=pkt_bytes,
-            flow_base=self._idx[tenant] * FLOW_BASE_STRIDE)
+            flow_base=self._idx[tenant] * self.flow_base_stride + drift)
 
 
 # -- scenario catalog ---------------------------------------------------------
@@ -192,9 +200,36 @@ def chaos(contracts: Dict[str, float], seed: int = 0) -> ScenarioWorkload:
                       trough_frac=0.3, stagger=3)
 
 
+def megaflow(contracts: Dict[str, float], seed: int = 0,
+             concurrent_flows: int = 100_000,
+             churn_frac: float = 0.005) -> ScenarioWorkload:
+    """CDN / mobile-gateway regime: 10⁵–10⁶ concurrent short-lived flows
+    with heavy per-tick churn (ISSUE 9). Steady near-peak rate so batches
+    are dense; each tick ``churn_frac`` of the flow window turns over —
+    the traffic the megaflow cache exists for. Mice-dominated: tail_alpha
+    is high (near-uniform mice, 1-2 packets per flow per batch) so the
+    whole flow window is genuinely live — with a CDN-atypical heavy tail
+    (alpha ~1.1) most of the window would never be sampled at all and the
+    "concurrent flow count" would be fiction. Tenant flow-id spaces use a
+    wide stride so 10⁶-flow windows plus drift never collide (and stay
+    inside the int32 five-tuple address space for a handful of tenants)."""
+    specs = {}
+    for t, peak in contracts.items():
+        # jitter 0: batch size stays constant tick to tick — the stressor
+        # here is flow-space churn, and a drifting batch size would measure
+        # eager pad/slice recompiles instead of classification cost.
+        specs[t] = TrafficSpec(pattern="constant", peak_gbps=0.9 * peak,
+                               num_flows=concurrent_flows, tail_alpha=6.0,
+                               jitter_frac=0.0,
+                               flow_churn_per_tick=max(
+                                   1, int(concurrent_flows * churn_frac)))
+    return ScenarioWorkload(specs, seed=seed, flow_base_stride=1 << 28)
+
+
 SCENARIOS = {"steady": steady, "bursty": bursty, "diurnal": diurnal,
              "churn": churn, "flash_crowd": flash_crowd,
-             "adversarial_churn": adversarial_churn, "chaos": chaos}
+             "adversarial_churn": adversarial_churn, "chaos": chaos,
+             "megaflow": megaflow}
 
 
 def make_scenario(name: str, contracts: Dict[str, float],
