@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-slow bench bench-obs bench-dataplane bench-megaflow bench-service bench-defrag bench-qos bench-chaos bench-control check-bench
+.PHONY: test test-slow bench bench-obs bench-dataplane bench-megaflow bench-service bench-defrag bench-qos bench-chaos bench-control bench-slo check-bench
 
 # Tier-1 suite. pytest.ini excludes `slow` tests by default (the small
 # dry-run compiles a full train step and can take minutes), so this can
@@ -71,3 +71,10 @@ bench-chaos:
 # `make check-bench`.
 bench-control:
 	python -m benchmarks.bench_control
+
+# SLO/alerting/flight overhead A/B (ISSUE 10): the fast chaos scenario with
+# the error-budget engine + multi-window burn-rate alerting + flight
+# recorder ON vs OFF; merges the `slo` record into BENCH_service.json. The
+# <=5% wall-clock overhead bar is gated by `make check-bench`.
+bench-slo:
+	python -m benchmarks.bench_service --scenario slo

@@ -28,8 +28,11 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import gc
 import json
 import pathlib
+import statistics
+import tempfile
 import time
 
 from benchmarks.common import row
@@ -70,6 +73,22 @@ QOS_SURGE = 8.0
 
 BARS = {"pooled_vs_standalone": 2.0, "pooled_vs_microservice": 1.2}
 
+# SLO/alerting/flight overhead bar (ISSUE 10): the always-on budget scoring
+# + per-tick burn-rule evaluation + flight-ring snapshots may cost at most
+# this fraction of wall-clock on the fast chaos scenario. The gated number
+# is measured IN-RUN (the layer's entry points are timed inside the arm
+# that runs them, divided by the same run's wall) because cross-run A/B on
+# this class of shared host has a null floor wider than the bar itself:
+# two IDENTICAL baseline arms, interleaved and min-filtered over 9 reps,
+# still read each other as +/-4-6 pct. See run_slo's docstring.
+SLO_OVERHEAD_MAX = 0.05
+# The A/B arms still run (aliveness, mitigation behavior, and the reported
+# raw wall ratio), advanced interleaved SLO_CHUNK ticks at a time so every
+# arm samples every noise regime the run drifts through, repeated SLO_REPS
+# times.
+SLO_REPS = 5
+SLO_CHUNK = 32
+
 
 def run(emit=print, fast: bool = False, seed: int = 0,
         scenario: str = "full", obs_dir=None) -> dict:
@@ -90,6 +109,10 @@ def run(emit=print, fast: bool = False, seed: int = 0,
         res = {"chaos": run_chaos(emit=emit, fast=fast, seed=seed,
                                   obs_dir=obs_dir)}
         res["pass"] = res["chaos"]["pass"]
+        return res
+    if scenario == "slo":
+        res = {"slo": run_slo(emit=emit, fast=fast, seed=seed)}
+        res["pass"] = res["slo"]["pass"]
         return res
     cfg = RuntimeConfig() if not fast else RuntimeConfig(
         dataplane_every=0, max_sim_seqs=48)
@@ -116,6 +139,7 @@ def run(emit=print, fast: bool = False, seed: int = 0,
                                                seed=seed)
     res["chaos"] = run_chaos(emit=emit, fast=fast, seed=seed,
                              obs_dir=obs_dir)
+    res["slo"] = run_slo(emit=emit, fast=fast, seed=seed)
     res["bars"] = BARS
     res["pass"] = check(res)
     return res
@@ -470,13 +494,215 @@ def run_chaos(emit=print, fast: bool = False, seed: int = 0,
     return rec
 
 
+def _slo_arm_setup(slo_on: bool, ticks: int, seed: int,
+                   flight_dir=None, alert_actions: bool = True):
+    """Build one arm of the SLO-overhead A/B (not yet run): the fast chaos
+    scenario (recovery + gray detection on, identical mix/traffic/fault
+    plan) with the SLO engine + burn-rate alerting + flight recorder ON or
+    OFF. ``alert_actions=False`` is shadow mode: alerts fire/trace/dump
+    but pages take no mitigation action. Returns (runtime, chaos_engine)
+    ready for ``rt.run(n, chaos=engine)``."""
+    cfg = RuntimeConfig(dataplane_every=0, max_sim_seqs=48, gray_detect=True,
+                        slo_enabled=slo_on, flight_dir=flight_dir,
+                        alert_actions=alert_actions)
+    mix = _chaos_mix()
+    ctrl = MeiliController(paper_cluster(**CHAOS_POOL))
+    registry = TenantRegistry(ctrl)
+    for spec in mix:
+        registry.register(spec)
+    wl = make_scenario("chaos", contracts(mix), seed=seed)
+    rt = ServiceRuntime(ctrl, registry, wl, cfg,
+                        recovery=RecoveryConfig(park=True, brownout=True,
+                                                seed=seed))
+    registry.admit_all()
+    usage: dict = {}
+    for dep in ctrl.deployments.values():
+        for n, nic_row in dep.allocation.A.items():
+            usage[n] = usage.get(n, 0) + sum(nic_row.values())
+    flap_nic = max(usage, key=lambda n: (usage[n], n))
+    rack0 = [n for n in ctrl.pool.rack_members("rack0") if n != flap_nic]
+    gray_nic = max(rack0, key=lambda n: (usage.get(n, 0), n))
+    engine = ChaosEngine(_chaos_plan(ticks, flap_nic, gray_nic))
+    return rt, engine
+
+
+def _instrument_slo(rt) -> dict:
+    """Wrap the four SLO-layer entry points on a live runtime with
+    wall-clock accumulators (budget scoring, burn-rule evaluation,
+    flight-ring snapshot, incident dump). Every call the layer makes is
+    timed — including the wrapper's own perf_counter pair, which counts
+    AGAINST the layer, so the attribution is conservative. Returns the
+    accumulator dict (component -> seconds, mutated in place)."""
+    acc = {"slo_observe": 0.0, "alerts_step": 0.0,
+           "flight_snapshot": 0.0, "flight_dump": 0.0}
+
+    def wrap(obj, name, key):
+        fn = getattr(obj, name)
+
+        def timed(*a, **k):
+            t0 = time.perf_counter()
+            try:
+                return fn(*a, **k)
+            finally:
+                acc[key] += time.perf_counter() - t0
+        setattr(obj, name, timed)
+
+    wrap(rt.slo, "observe", "slo_observe")
+    wrap(rt.alerts, "step", "alerts_step")
+    wrap(rt.flight, "snapshot", "flight_snapshot")
+    wrap(rt.flight, "dump_safe", "flight_dump")
+    return acc
+
+
+def run_slo(emit=print, fast: bool = False, seed: int = 0) -> dict:
+    """SLO/alerting/flight overhead benchmark (ISSUE 10 acceptance),
+    three arms on the fast chaos scenario, ``SLO_REPS`` interleaved reps:
+
+      off     — SLO layer disabled (baseline);
+      shadow  — the whole recording path ON (budget scoring every recorded
+                tick, both burn rules every tick, flight-ring snapshot
+                every tick, page-triggered dumps into a temp dir) but
+                ``alert_actions=False``: pages take no mitigation action;
+      on      — full layer, pages pre-arm the gray detector + force a
+                scale consult.
+
+    ``overhead_frac`` (gated ≤ ``SLO_OVERHEAD_MAX`` in ``check_bench``) is
+    the always-on cost of *recording* — the claim the bar defends —
+    measured by IN-RUN ATTRIBUTION on the shadow arm: the layer's four
+    entry points (budget scoring, burn-rule evaluation, flight snapshot,
+    incident dump) are wall-clock-timed inside the run, and the gated
+    number is layer-time over non-layer-time, median over reps. Numerator
+    and denominator come from the SAME run, so cross-run scheduler noise
+    cancels exactly; the wrapper's own timer cost lands in the numerator,
+    so the attribution is conservative. Reproducibility measured at
+    ±0.01 percentage points across invocations.
+
+    Why not gate the naive A/B wall ratio? It was measured unusable HERE:
+    this container's noise regime drifts on the same timescale as a run
+    with ~30 pct bursts, and a null experiment — two IDENTICAL off arms,
+    interleaved chunks, per-round minima over 9 reps — still read
+    +6.2/-2.8 pct across invocations (CPU-time variant: ±4 pct). A 5 pct
+    bar cannot sit on a ±5 pct instrument. The raw interleaved A/B ratio
+    is still recorded (``ab_wall_overhead_frac``) for context, unguarded.
+    on vs shadow is reported as ``mitigation_cost_frac``: real
+    control-plane work (earlier quarantines, forced rescales) the early
+    warning buys, priced separately because billing response work as
+    recording overhead would conflate the smoke detector with the fire
+    brigade. The alive-ness gates (pages fired, bundles dumped) run on the
+    full arm. Every arm uses the fast runtime configuration (dataplane
+    off) — the harshest denominator for the bar, since a tick is pure host
+    bookkeeping.
+
+    ``fast=True`` (the ``--fast``/tier-1 smoke) runs ONE rep at 1x ticks
+    and gates aliveness only; the smoke record self-describes as fast and
+    ``check_bench`` skips its overhead number, exactly like the other
+    fast-mode records. ``make bench-slo`` writes the measurement-grade
+    record the gate scores: 4x ticks (the fault plan scales with it),
+    ``SLO_REPS`` reps, arms advanced interleaved ``SLO_CHUNK`` ticks at a
+    time with the within-round order rotated."""
+    reps = 1 if fast else SLO_REPS
+    ticks = CHAOS_FAST_TICKS if fast else CHAOS_FAST_TICKS * 4
+    walls: dict = {"off": [], "shadow": [], "on": []}
+    arms = ("off", "shadow", "on")
+    attr_fracs: list = []       # per-rep attributed overhead, shadow arm
+    comp_s: dict = {}           # component -> seconds summed over reps
+    with tempfile.TemporaryDirectory(prefix="flight_bench_") as tmp:
+        for rep in range(reps):
+            rts = {arm: _slo_arm_setup(
+                       arm != "off", ticks, seed,
+                       flight_dir=tmp if arm != "off" else None,
+                       alert_actions=(arm == "on"))
+                   for arm in arms}
+            acc = _instrument_slo(rts["shadow"][0])
+            total = dict.fromkeys(arms, 0.0)
+            # GC pauses land on whichever arm happens to cross a collection
+            # threshold (the recording arms allocate more, so the off arm
+            # would also *inherit* their debt) — collect up front and keep
+            # the cycle collector out of the timed region for all arms.
+            gc.collect()
+            gc.disable()
+            try:
+                done = rnd = 0
+                while done < ticks:
+                    n = min(SLO_CHUNK, ticks - done)
+                    for arm in arms[rnd % 3:] + arms[:rnd % 3]:
+                        rt, engine = rts[arm]
+                        t0 = time.perf_counter()
+                        rt.run(n, chaos=engine)
+                        total[arm] += time.perf_counter() - t0
+                    done += n
+                    rnd += 1
+            finally:
+                gc.enable()
+            for arm in arms:
+                rts[arm][0].ctrl.check_ledger()
+                walls[arm].append(total[arm])
+            layer = sum(acc.values())
+            attr_fracs.append(layer / max(total["shadow"] - layer, 1e-9))
+            for k, v in acc.items():
+                comp_s[k] = comp_s.get(k, 0.0) + v
+        rt_on = rts["on"][0]
+        dumps = len(rt_on.flight.dumps)
+        shadow_dumps = len(rts["shadow"][0].flight.dumps)
+    wall_off, wall_shadow, wall_on = (statistics.median(walls[k])
+                                      for k in ("off", "shadow", "on"))
+    # the gated number: in-run attributed layer cost (see docstring)
+    overhead = statistics.median(attr_fracs)
+    # paired within-rep wall ratios: context only, never gated
+    ab_overhead = statistics.median(
+        s / o - 1.0 for s, o in zip(walls["shadow"], walls["off"]))
+    mitigation = statistics.median(
+        n / s - 1.0 for n, s in zip(walls["on"], walls["shadow"]))
+    transitions = rt_on.alerts.transitions
+    pages = sum(1 for t in transitions if t.severity == "page"
+                and t.state == "firing")
+    rec = {
+        # self-describing (mergeable into a JSON from another mode/seed):
+        # fast smoke records are skipped by the check_bench overhead gate.
+        "fast": bool(fast),
+        "seed": seed,
+        "ticks": ticks,
+        "reps": reps,
+        "pool": dict(CHAOS_POOL),
+        "wall_s_off": wall_off,
+        "wall_s_shadow": wall_shadow,
+        "wall_s_on": wall_on,
+        "overhead_frac": overhead,
+        "overhead_max": SLO_OVERHEAD_MAX,
+        "overhead_components_ms": {k: round(v / reps * 1e3, 3)
+                                   for k, v in sorted(comp_s.items())},
+        "ab_wall_overhead_frac": ab_overhead,
+        "mitigation_cost_frac": mitigation,
+        "alert_transitions": len(transitions),
+        "page_alerts": pages,
+        "flight_dumps": dumps,
+        "shadow_flight_dumps": shadow_dumps,
+        "budgets_tracked": len(rt_on.slo.budgets),
+    }
+    # Pass: recording is cheap AND the layer is demonstrably alive under
+    # chaos — the full arm must page and auto-dump at least one bundle.
+    # The smoke gates aliveness only (see docstring).
+    rec["pass"] = bool((fast or overhead <= SLO_OVERHEAD_MAX)
+                       and pages > 0 and dumps > 0)
+    emit(row("service_slo_overhead", 0,
+             f"attr{overhead * 100:+.2f}pct_bar"
+             f"{SLO_OVERHEAD_MAX * 100:.0f}pct_abwall"
+             f"{ab_overhead * 100:+.1f}pct"))
+    emit(row("service_slo_mitigation", 0,
+             f"on{wall_on:.2f}s_{mitigation * 100:+.1f}pct_response_work"))
+    emit(row("service_slo_alerts", 0,
+             f"transitions{len(transitions)}_pages{pages}_dumps{dumps}"))
+    emit(row("service_slo", 0, f"pass={rec['pass']}"))
+    return rec
+
+
 def check(res: dict) -> bool:
     ok = all(res["ratios"][k] >= bar for k, bar in BARS.items())
     for rec in res["scenarios"].values():
         ok = ok and all(rec[m]["slo_pass"] for m in MODES)
         if "failover" in rec:
             ok = ok and rec["failover"]["survived"]
-    for extra in ("defrag", "qos", "adversarial_churn", "chaos"):
+    for extra in ("defrag", "qos", "adversarial_churn", "chaos", "slo"):
         if extra in res:
             ok = ok and res[extra]["pass"]
     return ok
@@ -489,12 +715,14 @@ def main(argv=None) -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scenario",
                     choices=("full", "churn", "flashcrowd", "adversarial",
-                             "chaos"),
+                             "chaos", "slo"),
                     default="full",
                     help="churn = only the defragmentation A/B "
                          "(make bench-defrag); flashcrowd = only the QoS "
                          "isolation A/B, adversarial = only the "
-                         "admission-pressure run (make bench-qos)")
+                         "admission-pressure run (make bench-qos); slo = "
+                         "only the SLO/alerting/flight overhead A/B "
+                         "(make bench-slo)")
     ap.add_argument("--out", default=None,
                     help="output JSON path (default: repo-root BENCH_service.json)")
     ap.add_argument("--emit-obs", action="store_true",
@@ -524,7 +752,7 @@ def main(argv=None) -> None:
         **res,
     }
     partial_keys = {"churn": "defrag", "flashcrowd": "qos", "chaos": "chaos",
-                    "adversarial": "adversarial_churn"}
+                    "adversarial": "adversarial_churn", "slo": "slo"}
     if args.scenario in partial_keys:
         # keep the full-comparison numbers already on disk; merge the new
         # partial record into the existing JSON instead of clobbering it

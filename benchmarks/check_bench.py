@@ -121,6 +121,42 @@ def check(bench: dict, baseline: dict, emit=print) -> bool:
     # steady-state packet hit-rate >= megaflow_min_hit_rate, zero fallbacks
     # and zero steady-state recompiles. The record rides in
     # BENCH_dataplane.json (merged in by main()); fast-mode records skip.
+    # SLO/alerting/flight overhead (ISSUE 10): the always-on budget scoring
+    # + per-tick burn-rule evaluation + flight-ring snapshots (shadow arm)
+    # must cost <= slo_overhead_max of wall-clock on the chaos scenario.
+    # The gated number is in-run attributed (layer entry points timed
+    # inside the arm that runs them, over the same run's non-layer wall) —
+    # run_slo's docstring documents why the naive cross-run A/B ratio is
+    # recorded but not gated. Fast-mode records are aliveness smokes and
+    # skip, same as the others; the gated record comes from
+    # `make bench-slo`.
+    slo = bench.get("slo")
+    bar = baseline.get("slo_overhead_max")
+    if slo is None or bar is None:
+        emit("check-bench: no slo record, skipped")
+    elif slo.get("fast"):
+        emit("check-bench: fast-mode slo record not comparable, skipped")
+    else:
+        cur = slo.get("overhead_frac")
+        if cur is None:
+            emit("check-bench: FAIL slo overhead_frac missing")
+            ok = False
+        else:
+            good = cur <= bar
+            emit(f"check-bench: {'ok  ' if good else 'FAIL'} slo overhead "
+                 f"{cur * 100:+.1f}% (bar {bar * 100:.0f}%)")
+            ok = ok and good
+        for name in ("page_alerts", "flight_dumps"):
+            cur = slo.get(name)
+            if cur is None:
+                emit(f"check-bench: FAIL slo {name} missing")
+                ok = False
+                continue
+            good = cur > 0
+            emit(f"check-bench: {'ok  ' if good else 'FAIL'} slo "
+                 f"{name} = {cur} (want > 0)")
+            ok = ok and good
+
     mega = bench.get("megaflow")
     bar = baseline.get("megaflow_min_speedup")
     if mega is None or bar is None:

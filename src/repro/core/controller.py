@@ -169,6 +169,18 @@ class MeiliController:
         current allocation (idempotent; called after every mutation)."""
         self.pool.set_usage(dep.tenant or dep.app.name, dep.usage())
 
+    def flight_state(self) -> Dict[str, dict]:
+        """Per-NIC pool state for the flight recorder's per-tick snapshot
+        (ISSUE 10). The unsharded layout carries no shard labels and no
+        shard digests; ``ShardedController`` overrides to add both."""
+        pool = self.pool
+        nics: Dict[str, dict] = {}
+        for n in sorted(pool.names()):
+            st = pool[n]
+            nics[n] = {"alive": st.alive, "free_bw_gbps": st.free_bw_gbps,
+                       "gray_frac": st.gray_frac}
+        return {"nics": nics, "shards": {}}
+
     # -- §6.1 demand calculation -------------------------------------------------
     def demand(self, profile: AppProfile, target_gbps: float
                ) -> tuple[Dict[str, int], Dict[str, int], float]:

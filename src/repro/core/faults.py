@@ -435,7 +435,18 @@ class ChaosEngine:
             raise ValueError(f"unknown fault kind: {ev.kind!r}")
         self.fired.append(ev)
         rt.recovery.sweep(tick)
-        sentinel_check(rt)
+        try:
+            sentinel_check(rt)
+        except AssertionError:
+            # Sentinel tripped: auto-dump the flight recorder's incident
+            # bundle (ISSUE 10) so the failing state is preserved. The dump
+            # is exception-safe (``dump_safe`` never raises — a failed dump
+            # logs a ``flight_dump_failed`` trace event instead) and the
+            # original sentinel error always propagates unmasked.
+            fl = getattr(rt, "flight", None)
+            if fl is not None:
+                fl.dump_safe(trigger="sentinel_failure", tick=tick)
+            raise
 
     def _crash(self, tick: int, nic: Optional[str], note: bool = True,
                kind: str = CRASH) -> Optional[str]:

@@ -233,6 +233,12 @@ class ResourceGovernor:
             kinds.update(pool[name].free)
         self._headroom = {k: pool.free_total(k) for k in kinds}
 
+    def headroom_snapshot(self) -> Dict[str, int]:
+        """The current per-kind free-unit ledger (post any grants drawn this
+        tick) — read by the flight recorder's per-tick snapshot. Empty
+        before the first ``begin_tick``."""
+        return dict(self._headroom) if self._headroom else {}
+
     # -- brownout --------------------------------------------------------------
     def set_brownout(self, level: Optional[float]) -> None:
         """Enter/leave degraded partial-grant mode. ``level`` is the base

@@ -228,6 +228,22 @@ class ShardedController(MeiliController):
             self.shards[owner].tenants.discard(tenant)
             self.last_shard[tenant] = owner
 
+    # -- flight recorder -------------------------------------------------------
+    def flight_state(self) -> Dict[str, dict]:
+        """Shard-labeled flight snapshot (ISSUE 10): every NIC row carries
+        its owning shard and each shard reports its digest age + tenant
+        count — so an incident bundle taken under the sharded controller
+        reconstructs which failure domain the incident lived in."""
+        state = super().flight_state()
+        for n, row in state["nics"].items():
+            row["shard"] = self.shard_of_nic(n)
+        state["shards"] = {
+            name: {"digest_tick": sh.digest_tick,
+                   "tenants": len(sh.tenants),
+                   "digest_bw_gbps": sh.digest_bw_gbps}
+            for name, sh in sorted(self.shards.items())}
+        return state
+
     # -- gray-drain routing ----------------------------------------------------
     def drain_nic_candidates(self, nic: str,
                              exclude: Optional[set] = None) -> List[List[str]]:

@@ -72,3 +72,14 @@ class Obs:
 def load_trace(path) -> DecisionTrace:
     """Load a dumped ``trace.jsonl`` artifact back into a queryable trace."""
     return DecisionTrace.load_jsonl(path)
+
+
+# SLO / alerting / flight-recorder layer (ISSUE 10). Imported last: these
+# modules use ``from repro.obs import Obs``, which needs the class above to
+# exist during this package's own initialization.
+from repro.obs.alerts import (AlertTransition, BurnAlertManager,  # noqa: E402,F401
+                              BurnRule, DEFAULT_RULES, FIRING, PAGE,
+                              RESOLVED, WARN)
+from repro.obs.flight import FlightRecorder, load_bundle  # noqa: E402,F401
+from repro.obs.slo import (BurnSample, SLOEngine, SLOPolicy,  # noqa: E402,F401
+                           TenantBudget)

@@ -10,13 +10,16 @@ seeded reservoir (exact until capacity, then uniform-sample estimates — the
 headline "measured" number) and a set of P² markers (O(1) cross-check
 series). ``quantile()`` returns the reservoir value.
 
-Exposition: ``render_prometheus()`` emits the text format (counters/gauges
-as-is; histograms as Prometheus summaries — ``{quantile="0.99"}`` rows plus
-``_count``/``_sum``); ``to_records()``/``dump_jsonl()`` emit one JSON object
-per series for artifact files.
+Exposition: ``render_prometheus()`` emits spec-conformant text format
+(ISSUE 10): counters carry the ``_total`` suffix exactly once, histograms
+render as true Prometheus histograms — cumulative ``_bucket{le="..."}``
+rows up to ``le="+Inf"`` plus ``_count``/``_sum`` — so the export parses
+under promtool-style linting. Reservoir/P² quantiles stay queryable in
+code and in the JSONL records (``to_records()``/``dump_jsonl()``).
 """
 from __future__ import annotations
 
+import bisect
 import json
 import pathlib
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
@@ -26,6 +29,18 @@ from repro.obs.percentiles import P2Quantile, Reservoir
 LabelKey = Tuple[Tuple[str, str], ...]
 
 DEFAULT_QUANTILES = (0.5, 0.9, 0.99)
+
+# Default bucket ladder: a 1-2.5-5 log ladder from 5 µs to 10 s covering
+# the latency-in-seconds series this registry mostly carries, with sane
+# coverage for other unit scales (counts, Gbps) in the upper decades.
+DEFAULT_BUCKETS = (
+    5e-6, 1e-5, 2.5e-5, 5e-5, 1e-4, 2.5e-4, 5e-4,
+    1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2,
+    0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0)
+
+
+def _fmt(v: float) -> str:
+    return f"{v:g}"
 
 
 def _label_key(labels: Dict[str, str]) -> LabelKey:
@@ -73,7 +88,8 @@ class Histogram:
     def __init__(self, name: str, labels: LabelKey,
                  quantiles: Sequence[float] = DEFAULT_QUANTILES,
                  reservoir_capacity: int = 4096, seed: int = 0,
-                 p2: bool = False):
+                 p2: bool = False,
+                 buckets: Sequence[float] = DEFAULT_BUCKETS):
         self.name = name
         self.labels = labels
         self.count = 0
@@ -81,6 +97,11 @@ class Histogram:
         self.min: Optional[float] = None
         self.max: Optional[float] = None
         self.quantiles = tuple(quantiles)
+        # Explicit bucket bounds (ISSUE 10): per-bucket (non-cumulative)
+        # observation counts; exposition renders them cumulatively with a
+        # trailing +Inf bucket equal to ``count``.
+        self.buckets = tuple(sorted(buckets))
+        self.bucket_counts = [0] * len(self.buckets)
         self.reservoir = Reservoir(reservoir_capacity, seed=seed)
         # The P² cross-check estimators are opt-in: they are O(1) memory but
         # per-sample Python updates, and the reservoir path is already exact
@@ -95,6 +116,9 @@ class Histogram:
         self.sum += x
         self.min = x if self.min is None else min(self.min, x)
         self.max = x if self.max is None else max(self.max, x)
+        idx = bisect.bisect_left(self.buckets, x)
+        if idx < len(self.buckets):
+            self.bucket_counts[idx] += 1
         self.reservoir.observe(x)
         for est in self._p2.values():
             est.observe(x)
@@ -110,6 +134,10 @@ class Histogram:
         lo, hi = float(arr.min()), float(arr.max())
         self.min = lo if self.min is None else min(self.min, lo)
         self.max = hi if self.max is None else max(self.max, hi)
+        idx = np.searchsorted(np.asarray(self.buckets), arr, side="left")
+        per = np.bincount(idx, minlength=len(self.buckets) + 1)
+        for i in range(len(self.buckets)):
+            self.bucket_counts[i] += int(per[i])
         self.reservoir.observe_many(arr)
         for est in self._p2.values():
             for x in arr.tolist():
@@ -123,6 +151,17 @@ class Histogram:
         """The O(1) P² cross-check estimate (tracked quantiles only)."""
         est = self._p2.get(q)
         return est.value() if est is not None else None
+
+    def cumulative_buckets(self) -> List[Tuple[str, int]]:
+        """``(le, cumulative_count)`` pairs ending in ``("+Inf", count)`` —
+        the exposition shape of the explicit bucket bounds."""
+        out: List[Tuple[str, int]] = []
+        cum = 0
+        for b, c in zip(self.buckets, self.bucket_counts):
+            cum += c
+            out.append((_fmt(b), cum))
+        out.append(("+Inf", self.count))
+        return out
 
     @property
     def mean(self) -> Optional[float]:
@@ -158,7 +197,9 @@ class MetricsRegistry:
 
     def histogram(self, name: str,
                   quantiles: Sequence[float] = DEFAULT_QUANTILES,
-                  p2: bool = False, **labels: str) -> Histogram:
+                  p2: bool = False,
+                  buckets: Sequence[float] = DEFAULT_BUCKETS,
+                  **labels: str) -> Histogram:
         # Per-series seed derived from the registry seed + identity so two
         # registries built alike retain identical reservoirs.
         key = (name, _label_key(labels))
@@ -167,7 +208,7 @@ class MetricsRegistry:
             m = Histogram(name, key[1], quantiles=quantiles,
                           reservoir_capacity=self.reservoir_capacity,
                           seed=hash((self.seed,) + key) & 0x7FFFFFFF,
-                          p2=p2)
+                          p2=p2, buckets=buckets)
             self._metrics[key] = m
         assert isinstance(m, Histogram)
         return m
@@ -181,27 +222,31 @@ class MetricsRegistry:
 
     # -- exposition ------------------------------------------------------------
     def render_prometheus(self) -> str:
+        """Spec-conformant text exposition (ISSUE 10): histograms render as
+        cumulative ``_bucket{le=...}`` series ending in ``+Inf`` plus
+        ``_count``/``_sum``; counters carry ``_total`` exactly once (series
+        already named ``*_total`` are not suffixed again)."""
         lines: List[str] = []
         seen_type: set = set()
         for (name, labels), m in sorted(self._metrics.items()):
             if isinstance(m, Histogram):
                 if name not in seen_type:
-                    lines.append(f"# TYPE {name} summary")
+                    lines.append(f"# TYPE {name} histogram")
                     seen_type.add(name)
                 base = dict(labels)
-                for q in m.quantiles:
-                    v = m.quantile(q)
-                    if v is None:
-                        continue
-                    lk = _label_key({**base, "quantile": repr(q)})
-                    lines.append(f"{name}{_label_str(lk)} {v:.9g}")
+                for le, cum in m.cumulative_buckets():
+                    lk = _label_key({**base, "le": le})
+                    lines.append(f"{name}_bucket{_label_str(lk)} {cum}")
                 lines.append(f"{name}_count{_label_str(labels)} {m.count}")
                 lines.append(f"{name}_sum{_label_str(labels)} {m.sum:.9g}")
             else:
-                if name not in seen_type:
-                    lines.append(f"# TYPE {name} {m.kind}")
-                    seen_type.add(name)
-                lines.append(f"{name}{_label_str(labels)} {m.value:.9g}")
+                out_name = name
+                if m.kind == "counter" and not name.endswith("_total"):
+                    out_name = name + "_total"
+                if out_name not in seen_type:
+                    lines.append(f"# TYPE {out_name} {m.kind}")
+                    seen_type.add(out_name)
+                lines.append(f"{out_name}{_label_str(labels)} {m.value:.9g}")
         return "\n".join(lines) + ("\n" if lines else "")
 
     def to_records(self) -> List[dict]:
@@ -213,6 +258,7 @@ class MetricsRegistry:
                            mean=m.mean,
                            quantiles={repr(q): m.quantile(q)
                                       for q in m.quantiles},
+                           buckets=dict(m.cumulative_buckets()),
                            exact=m.reservoir.exact)
                 if m._p2:              # cross-check only when tracked
                     rec["p2"] = {repr(q): m.p2_quantile(q)

@@ -171,11 +171,33 @@ class DecisionTrace:
             out.append(e)
         return out
 
-    def why(self, tenant: str, tick: int) -> List[TraceEvent]:
-        """Every decision/fault/span event touching ``tenant`` at ``tick`` —
-        the audit answer to "why did the pool do that to this tenant?"."""
-        return [e for e in self.events
-                if e.tick == tick and e.tenant == tenant]
+    def why(self, tenant: str, tick: Optional[int] = None, *,
+            tick_lo: Optional[int] = None,
+            tick_hi: Optional[int] = None) -> List[TraceEvent]:
+        """Every decision/fault/span event touching ``tenant`` at ``tick``
+        (or within ``[tick_lo, tick_hi]``) — the audit answer to "why did
+        the pool do that to this tenant?".
+
+        The range form (ISSUE 10) is *span-closed*: if either half of a
+        begin/end span pair lands in the window, its partner is included
+        too, so a burn-window query never returns a dangling span. Result
+        stays in causal (seq) order."""
+        if tick is not None:
+            tick_lo = tick_hi = tick
+        lo = tick_lo if tick_lo is not None else float("-inf")
+        hi = tick_hi if tick_hi is not None else float("inf")
+        sel = [e for e in self.events
+               if e.tenant == tenant and lo <= e.tick <= hi]
+        sids = {e.span_id for e in sel
+                if e.kind == SPAN and e.span_id is not None}
+        if sids:
+            have = {e.seq for e in sel}
+            closers = [e for e in self.events
+                       if e.kind == SPAN and e.span_id in sids
+                       and e.seq not in have]
+            if closers:
+                sel = sorted(sel + closers, key=lambda e: e.seq)
+        return sel
 
     def spans(self, name: Optional[str] = None,
               tenant: Optional[str] = None) -> List[Span]:

@@ -41,7 +41,9 @@ from repro.core.executor import ParallelDataPlane
 from repro.core.faults import (CRASH, ChaosEngine, FaultEvent, FaultPlan,
                                GrayFailureDetector, RecoveryConfig,
                                RecoveryManager)
-from repro.obs import Obs
+from repro.obs import (PAGE, WARN, BurnAlertManager, BurnRule, FlightRecorder,
+                       Obs, SLOEngine)
+from repro.obs.alerts import FIRING
 from repro.service.tenants import AdmissionError, TenantRegistry
 from repro.service.telemetry import (ClusterTick, TelemetryLog, TenantTick,
                                      hop_penalties, measure_tenant_tick)
@@ -88,6 +90,32 @@ class RuntimeConfig:
     # instead of the scalar dict walk. Default OFF: the scalar path is the
     # pinned reference oracle the kernel is property-tested against.
     vectorized_sched: bool = False
+    # SLO error-budget engine + multi-window burn-rate alerting + flight
+    # recorder (ISSUE 10). Default OFF so every pre-existing scenario is
+    # bit-identical; when on, each recorded TenantTick is scored against
+    # the tenant's SLA-derived budget, burn rules are evaluated per tick,
+    # and a page-severity alert pre-arms the gray detector (lower per-NIC
+    # evidence bar) + requests a proactive scale consult.
+    slo_enabled: bool = False
+    slo_horizon_ticks: int = 64       # rolling error-budget horizon
+    alert_fast_window: int = 8        # "1h-equivalent" page window (ticks)
+    alert_fast_confirm: int = 2
+    alert_slow_window: int = 24       # "6h-equivalent" warn window (ticks)
+    alert_slow_confirm: int = 6
+    alert_page_burn: float = 4.0      # page-rule burn-rate multiple
+    alert_warn_burn: float = 2.0      # warn-rule burn-rate multiple
+    alert_holddown_ticks: int = 4     # clear streak required to resolve
+    alert_prearm_ticks: int = 8       # page pre-arms implicated NICs this long
+    alert_prearm_factor: float = 0.5  # × gray_min_load_frac while pre-armed
+    # False = shadow mode: alerts still fire, trace, export metrics, and
+    # auto-dump flight bundles, but pages take NO action (no detector
+    # pre-arm, no forced scale consult). The observe-only deployment an
+    # operator runs before trusting alert-driven automation — and what the
+    # overhead A/B times, so mitigation work is not billed as recording.
+    alert_actions: bool = True
+    flight_capacity: int = 64         # snapshot ring length (ticks)
+    flight_trace_window: int = 16     # trailing trace ticks in a dump bundle
+    flight_dir: Optional[str] = None  # None = record, never auto-dump
 
 
 class ServiceRuntime:
@@ -134,10 +162,63 @@ class ServiceRuntime:
         self._probe_history: Dict[str, List[str]] = {}
         if self.gray is not None:
             self.gray.trace = self.obs.trace
+        # SLO / alerting / flight layer (ISSUE 10). The pre-arm ledger
+        # exists unconditionally — with no alerts it stays empty and the
+        # gray evidence bar is exactly the legacy one.
+        self._gray_prearm: Dict[str, int] = {}   # nic -> armed until tick
+        self.slo: Optional[SLOEngine] = None
+        self.alerts: Optional[BurnAlertManager] = None
+        self.flight: Optional[FlightRecorder] = None
+        if self.cfg.slo_enabled:
+            cfg = self.cfg
+            self.slo = SLOEngine(self.obs,
+                                 horizon_ticks=cfg.slo_horizon_ticks,
+                                 warmup_ticks=cfg.warmup_ticks,
+                                 shard_resolver=self.ctrl.shard_of)
+            rules = (BurnRule(PAGE, cfg.alert_fast_window,
+                              cfg.alert_fast_confirm, cfg.alert_page_burn),
+                     BurnRule(WARN, cfg.alert_slow_window,
+                              cfg.alert_slow_confirm, cfg.alert_warn_burn))
+            self.alerts = BurnAlertManager(
+                self.slo, self.obs, rules=rules,
+                holddown_ticks=cfg.alert_holddown_ticks,
+                shard_resolver=self.ctrl.shard_of)
+            if cfg.alert_actions:
+                self.alerts.on_page.append(self._on_page_alert)
+            self.telemetry.subscribe(self._slo_feed)
+            self.flight = FlightRecorder(
+                self.obs, capacity=cfg.flight_capacity,
+                out_dir=cfg.flight_dir,
+                trace_window_ticks=cfg.flight_trace_window)
         if self.cfg.vectorized_sched:
             from repro.core.sched_kernel import VectorizedScheduler
             controller.governor.attach_kernel(VectorizedScheduler())
         controller.add_hook(self._on_event)
+
+    # -- SLO feed + early-warning hook (ISSUE 10) ------------------------------
+    def _slo_feed(self, tt: TenantTick) -> None:
+        """Telemetry subscriber: score every recorded tick against the
+        tenant's SLA-derived error budget, exactly once."""
+        spec = self.registry.specs.get(tt.tenant)
+        if spec is not None and self.slo is not None:
+            self.slo.observe(tt, spec.sla)
+
+    def _on_page_alert(self, tenant: str, tr) -> None:
+        """A page-severity burn alert is the early warning the runtime acts
+        on BEFORE the contract breaks: pre-arm the gray detector on the
+        tenant's NICs (the per-NIC evidence bar drops by
+        ``alert_prearm_factor`` so a sick-but-lightly-loaded NIC can still
+        testify) and request a proactive scale consult next tick."""
+        dep = self.ctrl.deployments.get(tenant)
+        nics = sorted(dep.nics_used()) if dep is not None else []
+        until = self.tick_now + self.cfg.alert_prearm_ticks
+        for n in nics:
+            self._gray_prearm[n] = max(self._gray_prearm.get(n, -1), until)
+        self._force_rescale.add(tenant)
+        self.obs.trace.event("gray_prearm", tenant=tenant, nics=nics,
+                             until_tick=until,
+                             burn_long=round(tr.burn_long, 6),
+                             burn_short=round(tr.burn_short, 6))
 
     # -- controller feedback ---------------------------------------------------
     def _on_event(self, ev: dict) -> None:
@@ -507,9 +588,6 @@ class ServiceRuntime:
                     # either blames every NIC in the placement (service fell
                     # short) or exonerates them all (full service).
                     want = min(offered, max(0.0, dep.achievable_gbps))
-                    loaded = (want > 0.1
-                              and offered >= cfg.gray_min_load_frac
-                              * max(dep.achievable_gbps, 1e-9))
                     # A tenant the shared-ingress DWRR budget starved this
                     # tick cannot testify: its shortfall is the scheduler's
                     # doing, not its NICs' — contention deviation would
@@ -517,11 +595,22 @@ class ServiceRuntime:
                     starved = (ingress is not None
                                and served_bytes.get(tenant, 0.0) + 1.0
                                < min(queues[tenant], rate_caps[tenant]))
-                    if loaded and not in_grace and not starved:
+                    if want > 0.1 and not in_grace and not starved:
                         dev = max(0.0, 1.0 - achieved / want)
+                        ach_ref = max(dep.achievable_gbps, 1e-9)
                         for n in tenant_nics:
-                            blame.setdefault(n, []).append(dev)
-                            witnesses.setdefault(n, []).append(tenant)
+                            # Per-NIC evidence bar (ISSUE 10): a page-severity
+                            # burn alert pre-arms the implicated NICs, cutting
+                            # the "loaded enough to testify" bar so the
+                            # detector gathers evidence sooner. With nothing
+                            # pre-armed this is exactly the legacy
+                            # whole-placement gray_min_load_frac check.
+                            bar = cfg.gray_min_load_frac
+                            if self._gray_prearm.get(n, -1) > tick:
+                                bar *= cfg.alert_prearm_factor
+                            if offered >= bar * ach_ref:
+                                blame.setdefault(n, []).append(dev)
+                                witnesses.setdefault(n, []).append(tenant)
                 cluster_nics.update(tenant_nics)
                 cluster_hops += tenant_hops
                 self.telemetry.record(TenantTick(
@@ -545,9 +634,24 @@ class ServiceRuntime:
                 nic_util={r: self.ctrl.pool.utilization(r)
                           for r in ("cpu", "regex", "crypto", "compression")},
                 nics_used=len(cluster_nics), hop_pairs=cluster_hops))
+            # Alert evaluation BEFORE the gray pass: a page that fires this
+            # tick pre-arms the detector (via on_page) and its trace events
+            # precede any quarantine verdict the evidence later produces.
+            page_fired = False
+            if self.alerts is not None:
+                for tr in self.alerts.step(tick):
+                    if tr.severity == PAGE and tr.state == FIRING:
+                        page_fired = True
             if self.gray is not None and blame:
                 self.gray.observe(blame, observers=witnesses)
                 self._drain_suspects(tick)
+            if self.flight is not None:
+                # Snapshot end-of-tick state (grants, queues, headroom,
+                # suspicion, budgets) into the ring; a page-severity alert
+                # auto-dumps the incident bundle with this tick included.
+                self.flight.snapshot(tick, self)
+                if page_fired:
+                    self.flight.dump_safe(trigger="page_alert", tick=tick)
             self._events.clear()
             self.tick_now += 1
         return self.telemetry

@@ -90,6 +90,14 @@ class TelemetryLog:
         # report); the index appends only what arrived since the last call.
         self._groups: Dict[str, List[TenantTick]] = {}
         self._grouped_upto = 0
+        # Live consumers of the tenant-tick stream (ISSUE 10): the SLO
+        # engine subscribes so every recorded tick is scored exactly once,
+        # at the moment the runtime records it.
+        self._subscribers: List = []
+
+    def subscribe(self, fn) -> None:
+        """Register ``fn(TenantTick)`` to run on every ``record``."""
+        self._subscribers.append(fn)
 
     def _grouped(self) -> Dict[str, List[TenantTick]]:
         for t in self.tenant_ticks[self._grouped_upto:]:
@@ -99,6 +107,8 @@ class TelemetryLog:
 
     def record(self, t: TenantTick) -> None:
         self.tenant_ticks.append(t)
+        for fn in self._subscribers:
+            fn(t)
 
     def record_cluster(self, c: ClusterTick) -> None:
         self.cluster_ticks.append(c)

@@ -34,6 +34,13 @@ class TenantSLA:
     target_gbps: float            # contracted peak throughput
     p99_latency_s: float          # latency SLO on the sim-model p99
     priority: int = 1             # higher admits first (FCFS within a class)
+    # Error-budget terms (ISSUE 10): a tick is SLI-good when achieved
+    # throughput holds min_tput_frac of min(offered, target) and p99 stays
+    # under the latency target; budget_frac of the rolling horizon may be
+    # bad before the contract is broken. Defaults keep older call sites
+    # (positional construction) behaviorally identical.
+    min_tput_frac: float = 0.9    # SLI throughput floor (fraction of contract)
+    budget_frac: float = 0.05     # allowed bad-tick fraction of the horizon
 
 
 @dataclasses.dataclass

@@ -75,9 +75,34 @@ def test_registry_label_model_and_prometheus_render():
     assert h.count == 100 and h.quantile(0.5) == pytest.approx(50.5, rel=0.02)
 
     text = reg.render_prometheus()
+    # counters: `_total` suffix exactly once (already-suffixed names untouched)
     assert 'reqs_total{tenant="a"} 3' in text
-    assert 'lat_us{quantile="0.99",tenant="a"}' in text
+    assert "reqs_total_total" not in text
+    assert "# TYPE reqs_total counter" in text
+    reg.counter("plain", tenant="a").inc()
+    text = reg.render_prometheus()
+    assert 'plain_total{tenant="a"} 1' in text
+    # histograms: spec-conformant cumulative buckets ending in +Inf
+    assert "# TYPE lat_us histogram" in text
+    assert 'lat_us_bucket{le="+Inf",tenant="a"} 100' in text
+    # DEFAULT_BUCKETS top out at 10: values 1..100 put 1,2.5,5,10 on the
+    # ladder -> cumulative 10 observations at le="10"
+    assert 'lat_us_bucket{le="10",tenant="a"} 10' in text
     assert 'lat_us_count{tenant="a"} 100' in text
+    assert 'lat_us_sum{tenant="a"} 5050' in text
+    # quantiles stay queryable in code/JSONL, not in the exposition
+    assert 'quantile=' not in text
+
+
+def test_histogram_cumulative_buckets_monotone():
+    reg = MetricsRegistry()
+    h = reg.histogram("x_s", buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 0.5, 5.0, 50.0):
+        h.observe(v)
+    cum = h.cumulative_buckets()
+    assert cum == [("0.1", 1), ("1", 3), ("10", 4), ("+Inf", 5)]
+    vals = [c for _, c in cum]
+    assert vals == sorted(vals)
 
 
 def test_metrics_jsonl_dump(tmp_path):
@@ -115,6 +140,37 @@ def test_trace_span_nesting_and_why():
     assert [e.name for e in why if e.phase != "end"] == [
         "migrate", "scale_verdict", "failover", "replace_unit"]
     assert tr.why("t-a", 8) == []
+
+
+def test_why_tick_range_is_span_closed():
+    """ISSUE 10 satellite: the range form of ``why`` returns every event in
+    [tick_lo, tick_hi] and pulls in the out-of-window halves of any span
+    that straddles the boundary — no dangling begin/end."""
+    tr = DecisionTrace()
+    tr.set_tick(3)
+    tr.event("slo_burn", tenant="t-a", reason="p99")
+    tr.set_tick(5)
+    with tr.span("gray_drain", tenant="t-a", nic="bf2-2"):
+        tr.set_tick(9)   # the span END lands outside the queried window
+        tr.event("quarantine_verdict", tenant="t-a", nic="bf2-2")
+    tr.set_tick(12)
+    tr.event("slo_alert", tenant="t-a", state="resolved")
+    tr.event("other", tenant="t-b")   # different tenant, never included
+
+    sel = tr.why("t-a", tick_lo=3, tick_hi=6)
+    names = [(e.name, e.phase) for e in sel]
+    # burn + span begin in window; span end (tick 9) pulled in as closure
+    assert ("slo_burn", "") in names
+    assert ("gray_drain", "begin") in names and ("gray_drain", "end") in names
+    assert not any(e.name == "slo_alert" for e in sel)
+    assert not any(e.tenant == "t-b" for e in sel)
+    # causal (seq) order survives the closure merge
+    seqs = [e.seq for e in sel]
+    assert seqs == sorted(seqs)
+    # single-tick form still behaves as before
+    assert [e.name for e in tr.why("t-a", 12)] == ["slo_alert"]
+    # open-ended range = whole history for the tenant
+    assert len(tr.why("t-a")) == 5
 
 
 def test_controller_submit_migrate_failover_span_story():

@@ -1,0 +1,397 @@
+"""ISSUE 10: SLO error-budget engine, multi-window burn-rate alerting, and
+the chaos-grade flight recorder.
+
+The acceptance test reconstructs a full incident from artifacts alone: a
+gray failure burns a tenant's budget inside its post-failover grace window,
+the fast-window page alert fires BEFORE the first SLO-violating tick
+outside grace (grace exempts the SLO report, not the budget — that is the
+early warning), the pre-armed detector quarantines the sick NIC, the alert
+resolves, and ``why_slo`` + the auto-dumped ``flight_*.jsonl`` bundle tell
+the same causally-ordered story.
+
+Also pinned: budget math, the firing->resolved lifecycle (dedup +
+hold-down), byte-identical alert sequences across seeded replays and across
+the legacy vs 1-shard sharded controller, and the exception-safe flight
+dump (a failed dump logs ``flight_dump_failed`` and never masks the
+sentinel error that triggered it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+import pytest
+
+from repro.core.controller import MeiliController
+from repro.core.faults import (FLAP, GRAY, MID_MIGRATION, RACK, REVIVE,
+                               ChaosEngine, FaultEvent, FaultPlan,
+                               RecoveryConfig)
+from repro.core.pool import paper_cluster
+from repro.core.shard import ShardedController
+from repro.obs import Obs, SLOEngine, BurnAlertManager, BurnRule, PAGE, WARN
+from repro.obs.alerts import FIRING, RESOLVED
+from repro.obs.flight import load_bundle
+from repro.service.runtime import RuntimeConfig, ServiceRuntime
+from repro.service.telemetry import TenantTick
+from repro.service.tenants import (TenantRegistry, TenantSLA, contracts,
+                                   default_tenant_mix)
+from repro.service.workload import make_scenario
+
+FAST = RuntimeConfig(dataplane_every=0, max_sim_seqs=32)
+
+
+def _tick(tick, tenant="t", offered=10.0, achieved=10.0, p99=1e-4,
+          in_grace=False, p99_measured=0.0):
+    return TenantTick(tick=tick, tenant=tenant, offered_gbps=offered,
+                      achieved_gbps=achieved, p50_s=p99 / 2, p99_s=p99,
+                      units=4, slo_ok=True, in_grace=in_grace,
+                      p99_measured_s=p99_measured)
+
+
+SLA = TenantSLA(target_gbps=10.0, p99_latency_s=1e-3)
+
+
+# -- budget math ---------------------------------------------------------------
+
+def test_budget_math_and_burn_rate():
+    eng = SLOEngine(Obs(), horizon_ticks=20)
+    # 20-tick horizon at the default 5% budget -> exactly 1 bad tick allowed
+    for t in range(10):
+        bad = eng.observe(_tick(t, achieved=10.0 if t < 8 else 1.0), SLA)
+        assert bad == (t >= 8)
+    b = eng.budgets["t"]
+    assert b.burned() == 2
+    assert b.allowance() == pytest.approx(1.0)
+    assert b.remaining_frac() == 0.0          # clamped: burned > allowance
+    # burn over the trailing 4 ticks: 2/4 bad at budget_frac 0.05 -> 10x
+    assert eng.burn_rate("t", 4) == pytest.approx(10.0)
+    assert eng.burn_rate("t", 10) == pytest.approx(2 / 10 / 0.05)
+    assert eng.burn_rate("missing", 4) == 0.0
+    assert b.burned_ticks() == [8, 9]
+
+
+def test_budget_warmup_burns_nothing_but_grace_burns():
+    eng = SLOEngine(Obs(), horizon_ticks=16, warmup_ticks=2)
+    assert not eng.observe(_tick(0, achieved=0.0), SLA)      # warmup
+    assert not eng.observe(_tick(1, achieved=0.0), SLA)      # warmup
+    # Grace is the pool forgiving itself in slo_report accounting; the
+    # tenant still experienced the degradation, so the budget burns.
+    assert eng.observe(_tick(2, achieved=0.0, in_grace=True), SLA)
+    assert eng.budgets["t"].samples[-1].in_grace
+    assert eng.budgets["t"].burned() == 1
+
+
+def test_budget_p99_sli_prefers_measured_with_legacy_fallback():
+    eng = SLOEngine(Obs(), horizon_ticks=16)
+    # measured present and over target -> bad, even though legacy is fine
+    assert eng.observe(_tick(0, p99=1e-4, p99_measured=5e-3), SLA)
+    assert eng.budgets["t"].samples[-1].reason == "p99"
+    # measured absent (0.0) -> fall back to the legacy estimator
+    assert not eng.observe(_tick(1, p99=1e-4, p99_measured=0.0), SLA)
+    assert eng.observe(_tick(2, p99=5e-3, p99_measured=0.0), SLA)
+    # throughput shortfall is scored against min(offered, target)
+    assert eng.observe(_tick(3, offered=20.0, achieved=8.5), SLA)
+    assert eng.budgets["t"].samples[-1].reason == "tput"
+    # under-offered tenant is not punished for low absolute throughput
+    assert not eng.observe(_tick(4, offered=1.0, achieved=0.95), SLA)
+
+
+# -- alert lifecycle -----------------------------------------------------------
+
+def _manager(obs=None, holddown=3):
+    obs = obs or Obs()
+    eng = SLOEngine(obs, horizon_ticks=32)
+    rules = (BurnRule(PAGE, window_ticks=4, confirm_ticks=2,
+                      burn_threshold=4.0),)
+    return eng, BurnAlertManager(eng, obs, rules=rules,
+                                 holddown_ticks=holddown)
+
+
+def test_alert_fires_once_dedups_and_resolves_after_holddown():
+    eng, mgr = _manager(holddown=3)
+    tick = 0
+    # burn hard: every tick bad -> burn 20x over both windows
+    for _ in range(4):
+        eng.observe(_tick(tick, achieved=0.0), SLA)
+        mgr.step(tick)
+        tick += 1
+    firing = [t for t in mgr.transitions if t.state == FIRING]
+    assert len(firing) == 1 and firing[0].severity == PAGE
+    assert mgr.active() == [("t", PAGE)]
+    # recover: the clear streak must reach the holddown before resolving,
+    # and a mid-streak relapse resets it (no flapping)
+    for i in range(2):
+        eng.observe(_tick(tick, achieved=10.0), SLA)
+        mgr.step(tick)
+        tick += 1
+    assert mgr.active() == [("t", PAGE)]       # holddown not reached
+    eng.observe(_tick(tick, achieved=0.0), SLA)   # relapse...
+    mgr.step(tick)
+    tick += 1
+    # ...but one bad tick in a 4-tick window is only 5x... still >= 4x hot:
+    # dedup keeps the alert firing without a second transition
+    assert len([t for t in mgr.transitions if t.state == FIRING]) == 1
+    for _ in range(8):
+        eng.observe(_tick(tick, achieved=10.0), SLA)
+        mgr.step(tick)
+        tick += 1
+    resolved = [t for t in mgr.transitions if t.state == RESOLVED]
+    assert len(resolved) == 1 and mgr.active() == []
+    # metrics + trace carried every transition
+    obs = mgr.obs
+    assert obs.metrics.get("slo_alert_transitions_total",
+                           severity=PAGE, state=FIRING).value == 1
+    assert obs.metrics.get("slo_alert_transitions_total",
+                           severity=PAGE, state=RESOLVED).value == 1
+    assert len(obs.trace.query(name="slo_alert")) == 2
+
+
+def test_on_page_callback_and_sequence_json():
+    eng, mgr = _manager()
+    seen = []
+    mgr.on_page.append(lambda tenant, tr: seen.append((tenant, tr.tick)))
+    for t in range(3):
+        eng.observe(_tick(t, achieved=0.0), SLA)
+        mgr.step(t)
+    # trailing windows divide by min(window, samples): one fully-bad sample
+    # already reads as a 20x burn on both windows, so the page is immediate
+    assert seen == [("t", 0)]
+    seq = json.loads(mgr.sequence())
+    assert seq[0]["tenant"] == "t" and seq[0]["state"] == FIRING
+    assert set(seq[0]) == {"tick", "tenant", "severity", "state",
+                           "burn_long", "burn_short"}   # no wall-clock
+
+
+# -- determinism ---------------------------------------------------------------
+
+def _chaos_runtime(ctrl_cls, seed=0, ticks=48, **cfg_kw):
+    """The PR-5 chaos plan replayed with the SLO layer on (flight dumps off:
+    recording must not perturb determinism comparisons)."""
+    plan = FaultPlan([
+        FaultEvent(tick=5, kind=FLAP, nic="bf2-1", duration_ticks=4),
+        FaultEvent(tick=13, kind=GRAY, nic="bf2-2", fraction=0.25),
+        FaultEvent(tick=21, kind=MID_MIGRATION),
+        FaultEvent(tick=27, kind=RACK, rack="rack0"),
+        FaultEvent(tick=34, kind=REVIVE, rack="rack0"),
+        FaultEvent(tick=34, kind=REVIVE, nic="bf2-2"),
+    ])
+    cfg = dataclasses.replace(FAST, gray_detect=True, slo_enabled=True,
+                              **cfg_kw)
+    ctrl = ctrl_cls(paper_cluster(n_bf2=4, n_bf1=2, n_pensando=2, racks=1))
+    registry = TenantRegistry(ctrl)
+    mix = [dataclasses.replace(s, backup_nic=("bf1-0", "bf1-1")[i % 2])
+           for i, s in enumerate(default_tenant_mix())]
+    for spec in mix:
+        registry.register(spec)
+    wl = make_scenario("chaos", contracts(default_tenant_mix()), seed=seed)
+    rt = ServiceRuntime(ctrl, registry, wl, cfg,
+                        recovery=RecoveryConfig(park=True, brownout=True,
+                                                seed=seed))
+    registry.admit_all()
+    rt.run(ticks, chaos=ChaosEngine(plan))
+    return rt
+
+
+def test_shadow_mode_records_pages_but_takes_no_action():
+    """``alert_actions=False`` (the overhead benchmark's shadow arm):
+    pages still fire and land in the trace, but the runtime takes no
+    mitigation — no gray pre-arm, no forced scale consult."""
+    live = _chaos_runtime(MeiliController)
+    shadow = _chaos_runtime(MeiliController, alert_actions=False)
+    for rt in (live, shadow):
+        assert any(t.severity == PAGE and t.state == FIRING
+                   for t in rt.alerts.transitions)
+    assert live.obs.trace.query(name="gray_prearm")
+    assert not shadow.obs.trace.query(name="gray_prearm")
+
+
+def test_alert_sequence_deterministic_across_replays():
+    a = _chaos_runtime(MeiliController)
+    b = _chaos_runtime(MeiliController)
+    assert a.alerts.transitions, "chaos replay produced no alerts"
+    assert a.alerts.sequence() == b.alerts.sequence()   # byte-identical
+
+
+def test_alert_sequence_identical_on_one_shard_sharded_controller():
+    legacy = _chaos_runtime(MeiliController)
+    sharded = _chaos_runtime(ShardedController)
+    assert len(sharded.ctrl.shards) == 1
+    assert legacy.alerts.transitions
+    assert legacy.alerts.sequence() == sharded.alerts.sequence()
+    # shard labels ride only in trace detail, never in the sequence
+    ev = sharded.obs.trace.query(name="slo_alert")
+    assert ev and all("shard" in e.detail for e in ev)
+    ev_l = legacy.obs.trace.query(name="slo_alert")
+    assert ev_l and all("shard" not in e.detail for e in ev_l)
+
+
+# -- flight recorder -----------------------------------------------------------
+
+def _steady_slo_runtime(flight_dir=None, **cfg_kw):
+    cfg = dataclasses.replace(FAST, gray_detect=True, slo_enabled=True,
+                              flight_dir=flight_dir, **cfg_kw)
+    ctrl = MeiliController(paper_cluster())
+    registry = TenantRegistry(ctrl)
+    mix = default_tenant_mix()
+    for spec in mix:
+        registry.register(spec)
+    wl = make_scenario("steady", contracts(mix), seed=0)
+    rt = ServiceRuntime(ctrl, registry, wl, cfg,
+                        recovery=RecoveryConfig(park=True, brownout=True,
+                                                seed=0))
+    registry.admit_all()
+    return rt
+
+
+def test_flight_ring_is_bounded_and_snapshots_live_state(tmp_path):
+    rt = _steady_slo_runtime(flight_capacity=8)
+    rt.run(20)
+    ring = list(rt.flight.ring)
+    assert len(ring) == 8                      # bounded: capacity, not ticks
+    assert [s["tick"] for s in ring] == list(range(12, 20))
+    snap = ring[-1]
+    assert snap["queues_pkts"] and snap["grants_gbps"]
+    assert snap["budgets_remaining"]
+    assert set(snap["flight_state"]["nics"]) == set(rt.ctrl.pool.names())
+    assert all(v["alive"] for v in snap["flight_state"]["nics"].values())
+    # no dump directory configured -> recording on, dumping a silent no-op
+    assert rt.flight.dump_safe(trigger="manual", tick=19) is None
+    assert rt.flight.dumps == []
+
+
+def test_flight_dump_bundle_roundtrip(tmp_path):
+    rt = _steady_slo_runtime(flight_dir=str(tmp_path))
+    rt.run(10)
+    path = rt.flight.dump("manual", tick=9)
+    bundle = load_bundle(path)
+    head = bundle["header"][0]
+    assert head["trigger"] == "manual" and head["tick"] == 9
+    assert len(bundle["snapshot"]) == head["snapshots"] > 0
+    assert len(bundle["trace"]) == head["trace_events"] > 0
+    assert bundle["metric_delta"]              # first dump: deltas = absolutes
+    # a second immediate dump carries only what changed since the first
+    path2 = rt.flight.dump("manual", tick=9)
+    assert load_bundle(path2)["metric_delta"] == []
+
+
+def test_sentinel_failure_dumps_flight_bundle(tmp_path):
+    rt = _steady_slo_runtime(flight_dir=str(tmp_path))
+    rt.run(4)
+    rt._backlog[sorted(rt._backlog)[0]] = -1.0      # trip flow conservation
+    engine = ChaosEngine(FaultPlan(
+        [FaultEvent(tick=rt.tick_now, kind=FLAP, nic="bf2-0",
+                    duration_ticks=2)]))
+    with pytest.raises(AssertionError, match="chaos sentinel"):
+        rt.run(1, chaos=engine)
+    assert len(rt.flight.dumps) == 1
+    bundle = load_bundle(rt.flight.dumps[0])
+    assert bundle["header"][0]["trigger"] == "sentinel_failure"
+
+
+def test_failed_flight_dump_never_masks_the_sentinel_error(tmp_path):
+    # point the dump directory at an existing FILE: mkdir will fail
+    blocker = tmp_path / "not_a_dir"
+    blocker.write_text("x")
+    rt = _steady_slo_runtime(flight_dir=str(blocker))
+    rt.run(4)
+    rt._backlog[sorted(rt._backlog)[0]] = -1.0
+    engine = ChaosEngine(FaultPlan(
+        [FaultEvent(tick=rt.tick_now, kind=FLAP, nic="bf2-0",
+                    duration_ticks=2)]))
+    # the ORIGINAL sentinel error propagates, not the dump's IO error
+    with pytest.raises(AssertionError, match="chaos sentinel"):
+        rt.run(1, chaos=engine)
+    assert rt.flight.dumps == []
+    failed = rt.obs.trace.query(name="flight_dump_failed")
+    assert len(failed) == 1
+    assert failed[0].detail["trigger"] == "sentinel_failure"
+    assert "Error" in failed[0].detail["error"]
+
+
+# -- the acceptance criterion: incident reconstruction -------------------------
+
+def test_incident_reconstructed_from_artifacts_alone(tmp_path):
+    """Gray failure burns budget in-grace -> page fires BEFORE the first
+    SLO-violating tick outside grace -> pre-armed detector quarantines the
+    NIC -> alert resolves -> ``why_slo`` and the auto-dumped flight bundle
+    tell the same causally-ordered story."""
+    # Loose p99 targets isolate the SLI to throughput: the cumulative
+    # measured-p99 stream would otherwise keep burning long after the
+    # incident and the alert could never resolve.
+    rt = _steady_slo_runtime(slo_grace_ticks=6, flight_dir=str(tmp_path))
+    mix = {s.name: s for s in default_tenant_mix()}
+    for name, spec in rt.registry.specs.items():
+        rt.registry.specs[name] = dataclasses.replace(
+            spec, sla=dataclasses.replace(spec.sla, p99_latency_s=1.0))
+
+    # Fault targets: one tenant whose placement spans >= 2 NICs — flap one
+    # (grants the failover grace window), gray another at the same tick.
+    victim, nics = next(
+        (t, sorted(d.nics_used())) for t, d in rt.ctrl.deployments.items()
+        if len(d.nics_used()) >= 2)
+    flap_nic, gray_nic = nics[0], nics[1]
+    t0 = 8
+    plan = FaultPlan([   # due() sorts by kind: the flap (grace) fires first
+        FaultEvent(tick=t0, kind=FLAP, nic=flap_nic, duration_ticks=6),
+        FaultEvent(tick=t0, kind=GRAY, nic=gray_nic, fraction=0.25),
+    ])
+    rt.run(64, chaos=ChaosEngine(plan))
+
+    tr = rt.obs.trace
+    # -- the page fired BEFORE the first outside-grace SLO violation -------
+    pages = [t for t in rt.alerts.transitions
+             if t.tenant == victim and t.severity == PAGE]
+    assert pages and pages[0].state == FIRING
+    page_tick = pages[0].tick
+    violations = [t.tick for t in rt.telemetry.series(victim)
+                  if t.tick >= rt.cfg.warmup_ticks and not t.in_grace
+                  and not t.slo_ok]
+    assert violations, "the gray failure must violate the SLO post-grace"
+    assert page_tick < violations[0]
+    # and the burn that drove it happened in-grace (budget burns, SLO
+    # accounting forgives — that is what makes it an early warning)
+    burns = tr.query(name="slo_burn", tenant=victim)
+    assert burns and burns[0].detail["in_grace"]
+
+    # -- causal order: fault -> burn -> page -> pre-arm -> quarantine ------
+    seq_fault = tr.query(name="gray", nic=gray_nic, kind="fault")[0].seq
+    seq_burn = burns[0].seq
+    seq_page = next(e.seq for e in tr.query(name="slo_alert", tenant=victim)
+                    if e.detail["severity"] == PAGE
+                    and e.detail["state"] == FIRING)
+    prearm = tr.query(name="gray_prearm", tenant=victim)[0]
+    quar = tr.query(name="quarantine_verdict", nic=gray_nic)
+    assert quar, "the pre-armed detector must quarantine the gray NIC"
+    assert (seq_fault < seq_burn < seq_page < prearm.seq < quar[0].seq)
+    assert gray_nic in prearm.detail["nics"]
+
+    # -- the alert resolves once the drain restores service ----------------
+    resolved = [t for t in rt.alerts.transitions
+                if t.tenant == victim and t.severity == PAGE
+                and t.state == RESOLVED]
+    assert resolved and resolved[0].tick > quar[0].tick
+
+    # -- why_slo tells the same story ---------------------------------------
+    story = rt.slo.why_slo(victim)
+    assert story["tracked"] and story["burned_ticks"]
+    assert story["burned_ticks"][0] >= t0
+    assert story["remaining_frac"] < 1.0
+    names = [e["name"] for e in story["events"]]
+    assert names.index("slo_burn") < names.index("slo_alert")
+    assert "gray_prearm" in names
+
+    # -- the auto-dumped bundle agrees, from the file alone -----------------
+    dump = pathlib.Path(tmp_path) / f"flight_{page_tick}.jsonl"
+    assert str(dump) in rt.flight.dumps
+    bundle = load_bundle(dump)
+    assert bundle["header"][0]["trigger"] == "page_alert"
+    snaps = bundle["snapshot"]
+    assert snaps[-1]["tick"] == page_tick
+    # the bundle's own snapshots show the victim's budget draining and the
+    # page active at dump time
+    assert snaps[-1]["budgets_remaining"][victim] < 1.0
+    assert [victim, PAGE] in snaps[-1]["alerts_active"]
+    # the trailing trace window carries the in-grace burn and the page
+    tail = {(r["name"], r.get("tenant")) for r in bundle["trace"]}
+    assert ("slo_burn", victim) in tail and ("slo_alert", victim) in tail
